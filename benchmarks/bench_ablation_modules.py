@@ -1,0 +1,30 @@
+"""Paper Fig. 17: module ablation — vLLM / SuperInfer w/o DuplexKV (L/H) /
+full SuperInfer (Qwen2.5-32B, ShareGPT).
+
+w/o DuplexKV = layer-first layout + per-segment launches + serialized
+directions (the vLLM offloading engine), with a Low (300) or High (2400)
+explicit B_xfer; full = block-first + batched kernel + duplex + eager.
+"""
+from repro.configs import RotaSchedConfig
+
+from benchmarks.common import QUICK, emit, run_sim
+
+RPS = (22,) if QUICK else (18, 22, 26)
+
+
+def main() -> None:
+    for rps in RPS:
+        emit(f"fig17_vllm_rps{rps}", run_sim("qwen2.5-32b", rps, "fcfs"))
+        for tag, bx in (("noduplex_L", 300), ("noduplex_H", 2400)):
+            row = run_sim(
+                "qwen2.5-32b", rps, "rotasched",
+                rotary=RotaSchedConfig(b_xfer=bx),
+                auto_b_xfer=False, duplex=False, eager_rotation=False,
+                block_first_layout=False, batched_transfer_kernel=False)
+            emit(f"fig17_{tag}_rps{rps}", row)
+        emit(f"fig17_superinfer_rps{rps}",
+             run_sim("qwen2.5-32b", rps, "rotasched"))
+
+
+if __name__ == "__main__":
+    main()

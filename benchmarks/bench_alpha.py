@@ -1,0 +1,18 @@
+"""Paper Fig. 18: α sweep — larger α favours TBT (rotary priority) at the
+cost of TTFT (β_B = β_F = 0, Qwen2.5-32B, ShareGPT, contended RPS)."""
+from repro.configs import RotaSchedConfig
+
+from benchmarks.common import QUICK, emit, run_sim
+
+ALPHAS = (1.0, 3.0) if QUICK else (1.0, 2.0, 3.0, 5.0, 8.0)
+
+
+def main() -> None:
+    for a in ALPHAS:
+        row = run_sim("qwen2.5-32b", 26, "rotasched",
+                      rotary=RotaSchedConfig(alpha=a, beta_b=0.0, beta_f=0.0))
+        emit(f"fig18_alpha{a}", row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Paper Figs. 19-20: β_F sweep (waiting tolerance; larger => worse P99 TTFT)
+and β_B sweep (rotary tolerance; larger => worse P99 TBT). α = 1."""
+from repro.configs import RotaSchedConfig
+
+from benchmarks.common import QUICK, emit, run_sim
+
+BETA_F = (0.0, 1.0) if QUICK else (0.0, 0.5, 1.0, 2.0, 4.0)
+BETA_B = (-1.0, 1.0) if QUICK else (-2.0, -1.0, 0.0, 1.0, 2.0)
+
+
+def main() -> None:
+    for bf in BETA_F:
+        row = run_sim("qwen2.5-32b", 26, "rotasched",
+                      rotary=RotaSchedConfig(alpha=1.0, beta_b=0.0, beta_f=bf))
+        emit(f"fig19_betaF{bf}", row)
+    for bb in BETA_B:
+        row = run_sim("qwen2.5-32b", 26, "rotasched",
+                      rotary=RotaSchedConfig(alpha=1.0, beta_b=bb, beta_f=0.0))
+        emit(f"fig20_betaB{bb}", row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Paper Fig. 21: B_xfer sweep — higher per-iteration transfer budget cuts
+P99 TTFT and TBT (high swap bandwidth is what makes rotation viable)."""
+from repro.configs import RotaSchedConfig
+
+from benchmarks.common import QUICK, emit, run_sim
+
+BUDGETS = (300, 2400) if QUICK else (150, 300, 600, 1200, 2400, 4800)
+
+
+def main() -> None:
+    for bx in BUDGETS:
+        row = run_sim("qwen2.5-32b", 26, "rotasched",
+                      rotary=RotaSchedConfig(b_xfer=bx), auto_b_xfer=False)
+        emit(f"fig21_bxfer{bx}", row)
+
+
+if __name__ == "__main__":
+    main()

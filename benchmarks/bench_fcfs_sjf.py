@@ -1,0 +1,16 @@
+"""Paper Fig. 23 / Appendix A: FCFS vs SJF-oracle cannot prevent TTFT
+violations once KV storage is exhausted — waiting queue spikes either way."""
+from benchmarks.common import QUICK, emit, run_sim
+
+
+def main() -> None:
+    for rps in ((22,) if QUICK else (18, 22, 26)):
+        for sched in ("fcfs", "sjf"):
+            row = run_sim("qwen2.5-32b", rps, sched)
+            emit(f"fig23_{sched}_rps{rps}", row,
+                 keys=("ttft_attainment", "p99_ttft", "p50_ttft",
+                       "throughput_tok_s"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Fig. 16 (main result): TTFT/TBT SLO attainment across models ×
+datasets × request rates for SuperInfer vs baselines.
+
+Baselines: vLLM (=fcfs w/ passive preemption), LightLLM-like, LTR, WF/SF.
+NEO is excluded: its contribution is CPU-side *attention compute* offload,
+which has no analogue in this two-tier-memory framework (see DESIGN.md).
+"""
+from benchmarks.common import MODEL_SETUP, QUICK, emit, run_sim
+
+SYSTEMS = ("fcfs", "lightllm", "ltr", "rotasched")
+
+
+def main() -> None:
+    models = ("qwen2.5-32b",) if QUICK else tuple(MODEL_SETUP)
+    datasets = ("sharegpt",) if QUICK else ("sharegpt", "lmsys")
+    for model in models:
+        grid = MODEL_SETUP[model][1]
+        if QUICK:
+            grid = grid[1::2]
+        for dataset in datasets:
+            for rps in grid:
+                for sched in SYSTEMS:
+                    row = run_sim(model, rps, sched, dataset=dataset)
+                    emit(f"fig16_{model}_{dataset}_rps{rps}_{sched}", row)
+
+
+if __name__ == "__main__":
+    main()

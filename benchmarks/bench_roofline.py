@@ -1,0 +1,31 @@
+"""Roofline summary benchmark: prints the per-(arch × shape) baseline table
+from the dry-run artifacts (results/dryrun). Re-run cells with
+``python -m repro.launch.dryrun --all``."""
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def main() -> None:
+    print("roofline_cell,compile_s,bneck;frac_hw;compute_s;memory_s;coll_s")
+    for p in sorted(RESULTS.glob("*__single.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            if r.get("status") == "skipped":
+                print(f"roofline_{r['arch']}__{r['shape']},0,skipped")
+            continue
+        rl = r.get("roofline", {})
+        lb = rl.get("step_s_lower_bound", 0)
+        frac = rl.get("roofline_fraction_hw")
+        if frac is None and lb:
+            frac = max(rl.get("ideal_step_s", 0), rl.get("memory_s", 0)) / lb
+        print(f"roofline_{r['arch']}__{r['shape']},{r.get('compile_s', 0)},"
+              f"bneck={rl.get('bottleneck')};frac={frac or 0:.3f};"
+              f"compute={rl.get('compute_s', 0):.4f};"
+              f"memory={rl.get('memory_s', 0):.4f};"
+              f"coll={rl.get('collective_s', 0):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Paper Fig. 5 + Fig. 12: per-segment effective bandwidth by segment size
+(GH200 NVLink-C2C vs H200 PCIe) and the launch-vs-transfer crossover."""
+from repro.configs import GH200, H200_PCIE
+
+
+def main() -> None:
+    print("segment_bw,KiB,gh200_gbps,pcie_gbps,gh200_transfer_us,launch_us")
+    for size in (16 << 10, 64 << 10, 256 << 10, 1 << 20, 4 << 20, 8 << 20,
+                 16 << 20, 64 << 20):
+        g = GH200.link.effective_bw(size)
+        p = H200_PCIE.link.effective_bw(size)
+        t_us = size / g * 1e6
+        print(f"segment_bw,{size >> 10},{g/1e9:.1f},{p/1e9:.1f},"
+              f"{t_us:.1f},{GH200.link.launch_us}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Paper Fig. 2: P99 TTFT/TBT vs swap bandwidth (vLLM-style FCFS+swap),
+sweeping the host link from PCIe-class to C2C-class (Qwen2.5-32B, high RPS)."""
+from benchmarks.common import GH200, QUICK, emit, run_sim, scale_link
+
+
+def main() -> None:
+    factors = (0.125, 0.5, 1.0) if QUICK else (0.0625, 0.125, 0.25, 0.5, 1.0, 2.0)
+    for f in factors:
+        hw = scale_link(GH200, f)
+        row = run_sim("qwen2.5-32b", 22, "rotasched", hw=hw)
+        emit(f"fig2_linkx{f}", row)
+
+
+if __name__ == "__main__":
+    main()

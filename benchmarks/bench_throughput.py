@@ -1,0 +1,19 @@
+"""Paper Fig. 22: throughput of vLLM vs SuperInfer across the three models
+(rotation must not cost throughput; at high load it helps prefill batching)."""
+from benchmarks.common import MODEL_SETUP, QUICK, emit, run_sim
+
+
+def main() -> None:
+    models = ("qwen2.5-32b",) if QUICK else tuple(MODEL_SETUP)
+    for model in models:
+        grid = MODEL_SETUP[model][1]
+        for rps in (grid[-2],) if QUICK else grid[-2:]:
+            for sched in ("fcfs", "rotasched"):
+                row = run_sim(model, rps, sched)
+                emit(f"fig22_{model}_rps{rps}_{sched}", row,
+                     keys=("throughput_tok_s", "ttft_attainment",
+                           "tbt_attainment"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Table 1: transfer-engine ladder (Naive / MS / MS+MK / DuplexKV /
+Ideal) — bandwidth and E2E time for 8 GB per direction of Qwen2.5-32B KV."""
+from repro.configs import GH200, get_config
+from repro.core.blocktable import TransferDesc
+from repro.core.duplexkv import block_bytes_of
+from repro.core.transfer import TransferEngine
+
+PAPER = {"naive": 1556.15, "ms": 159.87, "ms_mk": 63.14, "duplex": 46.80,
+         "ideal": 41.66}
+
+
+def main() -> None:
+    cfg = get_config("qwen2.5-32b")
+    bb, segs = block_bytes_of(cfg, 16)
+    n = int(8e9) // bb
+    rows = []
+    for mode in ("naive", "ms", "ms_mk", "duplex"):
+        segs_m = segs if mode == "naive" else 1
+        d = [TransferDesc(i, 0, "d2h", 0, 0, bb, segs_m) for i in range(n)]
+        h = [TransferDesc(i, 0, "h2d", 0, 0, bb, segs_m) for i in range(n)]
+        st = TransferEngine(GH200.link, mode).execute(d, h)
+        bw = st.d2h_bytes / st.d2h_time / 1e9
+        rows.append((mode, st.e2e_time * 1e3, bw, st.launches))
+    ideal = TransferEngine(GH200.link, "duplex").ideal_duplex_time(8e9, 8e9)
+    rows.append(("ideal", ideal * 1e3, 192.0, 0))
+    print("table1_mode,e2e_ms,paper_e2e_ms,bw_gbps,launches")
+    for mode, ms, bw, n_launch in rows:
+        print(f"table1_{mode},{ms:.2f},{PAPER[mode]},{bw:.1f},{n_launch}")
+
+
+if __name__ == "__main__":
+    main()

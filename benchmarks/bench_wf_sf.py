@@ -1,0 +1,15 @@
+"""Paper Fig. 1: static Waiting-First vs Swapped-First vs FCFS —
+P99 TTFT / TBT under varying request rates (Qwen2.5-32B, ShareGPT)."""
+from benchmarks.common import MODEL_SETUP, QUICK, emit, run_sim
+
+
+def main() -> None:
+    rps_grid = (14, 22) if QUICK else MODEL_SETUP["qwen2.5-32b"][1][1:]
+    for rps in rps_grid:
+        for sched in ("fcfs", "wf", "sf"):
+            row = run_sim("qwen2.5-32b", rps, sched)
+            emit(f"fig1_{sched}_rps{rps}", row)
+
+
+if __name__ == "__main__":
+    main()

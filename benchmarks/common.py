@@ -1,0 +1,76 @@
+"""Shared benchmark harness: per-model serving regimes + sim runner.
+
+Regime notes (EXPERIMENTS.md §Method): HBM KV-block budgets are set so that
+*memory* contention (the paper's phenomenon) binds before raw compute
+saturation in the calibrated GH200 cost model — the analogue of the paper's
+144 GB GH200 serving 32B-class models with multi-hundred-token ShareGPT
+conversations. RPS grids bracket the contention knee per model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from typing import Dict, List, Optional
+
+from repro.configs import (GH200, H200_PCIE, HardwareProfile, LinkProfile,
+                           RotaSchedConfig, ServingConfig, get_config)
+from repro.serving.engine import ServingEngine
+from repro.serving.metrics import SLOReport
+from repro.serving.workload import generate_requests
+
+# model -> (hbm_blocks, rps grid)
+MODEL_SETUP = {
+    "llama3-8b": (6000, (20, 30, 40, 50)),
+    "qwen2.5-32b": (4000, (10, 14, 18, 22, 26)),
+    "mixtral-8x7b": (5000, (12, 18, 24, 30)),
+}
+
+DURATION_S = 25.0
+QUICK = "--quick" in sys.argv
+
+
+def scale_link(hw: HardwareProfile, factor: float) -> HardwareProfile:
+    link = hw.link
+    table = tuple((b, bw * factor) for b, bw in link.bw_table)
+    return dataclasses.replace(
+        hw, link=LinkProfile(bw_table=table,
+                             duplex_total_bw=link.duplex_total_bw * factor,
+                             dram_total_bw=link.dram_total_bw * factor,
+                             launch_us=link.launch_us))
+
+
+def run_sim(model: str, rps: float, scheduler: str, *,
+            dataset: str = "sharegpt", hw: HardwareProfile = GH200,
+            duration: float = DURATION_S, seed: int = 1,
+            rotary: Optional[RotaSchedConfig] = None,
+            **sv_overrides) -> Dict:
+    cfg = get_config(model)
+    hbm, _ = MODEL_SETUP[model]
+    sv_kw = dict(num_hbm_blocks=hbm, num_dram_blocks=100000,
+                 scheduler=scheduler)
+    if rotary is not None:
+        sv_kw["rotary"] = rotary
+    sv_kw.update(sv_overrides)
+    sv = ServingConfig(**sv_kw)
+    reqs = generate_requests(dataset, rps=rps, duration_s=duration, seed=seed)
+    eng = ServingEngine(cfg, sv, hw)
+    t0 = time.time()
+    rep = eng.run(reqs, max_time_s=30 * duration)
+    row = rep.row()
+    row.update(model=model, dataset=dataset, rps=rps, scheduler=scheduler,
+               wall_s=round(time.time() - t0, 1),
+               active_rotations=eng.stats.active_rotations,
+               passive=eng.stats.passive_preemptions,
+               eager_blocks=eng.stats.eager_blocks,
+               stall_s=round(eng.stats.stall_time, 2),
+               iters=eng.stats.iterations)
+    return row
+
+
+def emit(name: str, row: Dict, keys=("ttft_attainment", "tbt_attainment",
+                                     "p99_ttft", "p99_tbt",
+                                     "throughput_tok_s")) -> None:
+    vals = ";".join(f"{k}={row[k]:.4g}" if isinstance(row[k], float)
+                    else f"{k}={row[k]}" for k in keys if k in row)
+    print(f"{name},{row.get('wall_s', 0)},{vals}", flush=True)

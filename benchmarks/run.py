@@ -1,0 +1,48 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig16,table1]
+
+Prints ``name,seconds,derived`` CSV rows (per-module sections).
+"""
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("table1", "benchmarks.bench_transfer_engine"),
+    ("fig5_12", "benchmarks.bench_segment_bw"),
+    ("fig1", "benchmarks.bench_wf_sf"),
+    ("fig2", "benchmarks.bench_swap_bw"),
+    ("fig16", "benchmarks.bench_main_slo"),
+    ("fig17", "benchmarks.bench_ablation_modules"),
+    ("fig18", "benchmarks.bench_alpha"),
+    ("fig19_20", "benchmarks.bench_beta"),
+    ("fig21", "benchmarks.bench_bxfer"),
+    ("fig22", "benchmarks.bench_throughput"),
+    ("fig23", "benchmarks.bench_fcfs_sjf"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    only = None
+    for a in sys.argv[1:]:
+        if a.startswith("--only"):
+            only = set(a.split("=", 1)[1].split(",")) if "=" in a else None
+    import importlib
+    t_all = time.time()
+    for tag, modname in MODULES:
+        if only and tag not in only:
+            continue
+        print(f"# === {tag} ({modname}) ===", flush=True)
+        t0 = time.time()
+        try:
+            importlib.import_module(modname).main()
+            print(f"# {tag} done in {time.time()-t0:.0f}s", flush=True)
+        except Exception:  # noqa: BLE001
+            print(f"# {tag} FAILED:\n{traceback.format_exc()}", flush=True)
+    print(f"# total {time.time()-t_all:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""The paper's headline in miniature: SLO attainment for SuperInfer
+(RotaSched+DuplexKV) vs vLLM-style FCFS vs LTR under memory contention
+(simulated GH200 timing around the real scheduling stack).
+
+    PYTHONPATH=src python examples/serve_slo_comparison.py [--rps 22]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import GH200, ServingConfig, get_config
+from repro.serving.engine import ServingEngine
+from repro.serving.workload import generate_requests
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rps", type=float, default=22.0)
+    ap.add_argument("--duration", type=float, default=30.0)
+    args = ap.parse_args()
+
+    cfg = get_config("qwen2.5-32b")
+    print(f"{'system':12s} {'TTFT att':>9s} {'TBT att':>9s} {'p99 TTFT':>9s} "
+          f"{'p99 TBT':>9s} {'tok/s':>7s} {'rotations':>9s}")
+    for sched in ("fcfs", "ltr", "lightllm", "rotasched"):
+        sv = ServingConfig(num_hbm_blocks=4000, num_dram_blocks=100000,
+                           scheduler=sched)
+        reqs = generate_requests("sharegpt", rps=args.rps,
+                                 duration_s=args.duration, seed=1)
+        eng = ServingEngine(cfg, sv, GH200)
+        rep = eng.run(reqs)
+        name = "SuperInfer" if sched == "rotasched" else sched
+        print(f"{name:12s} {rep.ttft_attainment:9.3f} {rep.tbt_attainment:9.3f} "
+              f"{rep.p99_ttft:8.2f}s {rep.p99_tbt*1e3:7.0f}ms "
+              f"{rep.throughput_tok_s:7.0f} "
+              f"{eng.stats.active_rotations + eng.stats.passive_preemptions:9d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""END-TO-END serving driver (the paper's kind): batched requests served by
+the full SuperInfer engine — RotaSched scheduling + DuplexKV block table —
+with REAL model execution (a reduced llama-family model generates every
+token; rotations physically move the KV cache off/on device).
+
+Proves losslessness: the token streams match a run with abundant memory
+(no rotation).
+
+    PYTHONPATH=src python examples/serve_small_real.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs import GH200, ServingConfig, get_config
+from repro.serving.engine import ServingEngine
+from repro.serving.executor import RealExecutor
+from repro.core.types import Request
+
+
+def make_requests(n, cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(8, 16))
+        reqs.append(Request(
+            req_id=i, arrival_time=0.0,
+            prompt_len=plen, output_len=int(rng.integers(12, 20)),
+            prompt_ids=[int(x) for x in rng.integers(1, cfg.vocab_size, plen)]))
+    return reqs
+
+
+def run(num_hbm_blocks, label, cfg):
+    sv = ServingConfig(num_hbm_blocks=num_hbm_blocks, num_dram_blocks=512,
+                       scheduler="rotasched", block_size=4, max_model_len=64)
+    real = RealExecutor(cfg, seed=42)
+    eng = ServingEngine(cfg, sv, GH200, real_executor=real)
+    reqs = make_requests(8, cfg, seed=3)
+    rep = eng.run(reqs)
+    streams = {r.req_id: list(r.generated_ids) for r in reqs}
+    print(f"[{label}] rotations={eng.stats.active_rotations + eng.stats.passive_preemptions} "
+          f"ttft_att={rep.ttft_attainment:.2f} iters={eng.stats.iterations}")
+    return streams
+
+
+def main():
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              dtype="float32")
+    ample = run(4096, "ample memory (no rotation)", cfg)
+    tight = run(16, "tight memory (forced rotation)", cfg)
+    assert ample == tight, "rotation changed generated tokens!"
+    print("token streams identical under rotation — DuplexKV is lossless ✓")
+    for rid in sorted(ample)[:3]:
+        print(f"  req {rid}: {ample[rid]}")
+
+
+if __name__ == "__main__":
+    main()

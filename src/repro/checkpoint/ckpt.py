@@ -1,0 +1,119 @@
+"""Sharded checkpointing with async save and elastic-reshard restore.
+
+Format: one .npy per pytree leaf (logical/global array) + manifest.json.
+Restore places leaves onto ANY mesh via device_put with the target
+NamedSharding — elastic scale up/down needs no converter. Saves are atomic
+(tmp dir + rename) and optionally asynchronous (background thread), with
+retention of the last ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save -----------------------------------------------------------------
+    def save(self, step: int, state: Any, *, async_: bool = False) -> None:
+        leaves, _ = _flatten(state)
+        # materialize on host BEFORE handing to the thread (values at step t)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        self.wait()   # never two writers at once
+        if async_:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    @staticmethod
+    def _to_storable(arr: np.ndarray):
+        """numpy can't round-trip ml_dtypes (bf16/f8); store a bit-view."""
+        if arr.dtype.kind == "V" or str(arr.dtype) in ("bfloat16", "float8_e4m3fn",
+                                                       "float8_e5m2"):
+            view = {2: np.uint16, 1: np.uint8}[arr.dtype.itemsize]
+            return arr.view(view), str(arr.dtype)
+        return arr, str(arr.dtype)
+
+    @staticmethod
+    def _from_storable(arr: np.ndarray, dtype: str) -> np.ndarray:
+        if str(arr.dtype) != dtype:
+            import ml_dtypes
+            return arr.view(getattr(ml_dtypes, dtype))
+        return arr
+
+    def _write(self, step: int, host_leaves) -> None:
+        tmp = self.dir / f".tmp-{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "time": time.time(), "leaves": []}
+        for i, arr in enumerate(host_leaves):
+            stor, dt = self._to_storable(arr)
+            np.save(tmp / f"leaf_{i}.npy", stor)
+            manifest["leaves"].append(
+                {"i": i, "shape": list(arr.shape), "dtype": dt})
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        final = self.dir / f"step_{step:08d}"
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+        self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+    def all_steps(self):
+        return [int(p.name.split("_")[1]) for p in self.dir.glob("step_*")]
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return max(steps) if steps else None
+
+    def restore(self, step: int, template: Any, shardings: Any = None) -> Any:
+        """``template``: pytree matching the saved structure (values unused).
+        ``shardings``: matching pytree of (Named)Shardings or None — this is
+        the elastic-reshard hook: restore onto any mesh."""
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        leaves, treedef = _flatten(template)
+        assert len(leaves) == len(manifest["leaves"]), \
+            f"checkpoint has {len(manifest['leaves'])} leaves, template {len(leaves)}"
+        sh_leaves = (jax.tree.leaves(shardings,
+                                     is_leaf=lambda x: hasattr(x, "device_set"))
+                     if shardings is not None else [None] * len(leaves))
+        out = []
+        for i, (ref, sh) in enumerate(zip(leaves, sh_leaves)):
+            arr = np.load(d / f"leaf_{i}.npy")
+            arr = self._from_storable(arr, manifest["leaves"][i]["dtype"])
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return jax.tree.unflatten(treedef, out)

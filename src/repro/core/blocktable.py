@@ -1,0 +1,229 @@
+"""Two-tier (HBM + DRAM) paged KV block table with eager block rotation.
+
+Block life-cycle (paper §4.3.2):
+
+  HBM_DIRTY  --block fills up-->  HBM_SYNCED(no DRAM copy)
+  HBM_SYNCED --eager D2H (background)--> BOTH (valid copies in HBM and DRAM)
+  preemption: BOTH  -> DRAM_ONLY  (HBM copy dropped, FREE — zero transfer)
+              DIRTY/SYNCED -> D2H transfer of just those blocks
+  swap-in:    DRAM_ONLY -> BOTH via H2D (DRAM copy retained; a re-preemption
+              of an untouched block is again free — eager rotation doubles as
+              an incremental host-side backup, used for fault tolerance)
+
+Data-race-freedom invariant (checked): an HBM slot never serves simultaneously
+as a swap-in destination and a swap-out source — swap-in destinations come
+from the free pool, swap-out sources are freed only on transfer completion.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+
+class BlockLoc(enum.Enum):
+    HBM = "hbm"
+    DRAM = "dram"
+    BOTH = "both"
+
+
+@dataclasses.dataclass
+class Block:
+    block_id: int
+    req_id: int
+    index: int                 # position in the request's block list
+    loc: BlockLoc
+    synced: bool = False       # fully written (immutable until req finishes)
+    hbm_slot: Optional[int] = None
+    dram_slot: Optional[int] = None
+    d2h_inflight: bool = False
+    h2d_inflight: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferDesc:
+    """One block move; ``segments`` is the number of contiguous regions the
+    layout imposes (layer-first: N_layers segments; block-first: 1)."""
+    block_id: int
+    req_id: int
+    direction: str             # "d2h" | "h2d"
+    src_slot: int
+    dst_slot: int
+    nbytes: int
+    segments: int
+
+
+class OutOfBlocks(RuntimeError):
+    pass
+
+
+class TwoTierBlockTable:
+    def __init__(self, num_hbm_blocks: int, num_dram_blocks: int,
+                 block_bytes: int, segments_per_block: int):
+        self.block_bytes = block_bytes
+        self.segments_per_block = segments_per_block
+        self._hbm_free: List[int] = list(range(num_hbm_blocks - 1, -1, -1))
+        self._dram_free: List[int] = list(range(num_dram_blocks - 1, -1, -1))
+        self._blocks: Dict[int, Block] = {}
+        self._by_req: Dict[int, List[int]] = {}
+        self._next_id = 0
+        self.num_hbm_blocks = num_hbm_blocks
+        self.num_dram_blocks = num_dram_blocks
+        # stats
+        self.eager_d2h_blocks = 0
+        self.preempt_d2h_blocks = 0
+        self.preempt_free_blocks = 0
+        self.swapin_h2d_blocks = 0
+
+    # -- capacity -------------------------------------------------------------
+    @property
+    def hbm_free(self) -> int:
+        return len(self._hbm_free)
+
+    @property
+    def dram_free(self) -> int:
+        return len(self._dram_free)
+
+    def blocks_of(self, req_id: int) -> List[Block]:
+        return [self._blocks[b] for b in self._by_req.get(req_id, [])]
+
+    def hbm_blocks_of(self, req_id: int) -> int:
+        return sum(1 for b in self.blocks_of(req_id)
+                   if b.loc in (BlockLoc.HBM, BlockLoc.BOTH))
+
+    # -- allocation -----------------------------------------------------------
+    def alloc_hbm(self, req_id: int, n: int) -> List[Block]:
+        if len(self._hbm_free) < n:
+            raise OutOfBlocks(f"need {n} HBM blocks, have {len(self._hbm_free)}")
+        out = []
+        lst = self._by_req.setdefault(req_id, [])
+        for _ in range(n):
+            b = Block(self._next_id, req_id, len(lst), BlockLoc.HBM,
+                      hbm_slot=self._hbm_free.pop())
+            self._next_id += 1
+            self._blocks[b.block_id] = b
+            lst.append(b.block_id)
+            out.append(b)
+        return out
+
+    def mark_synced(self, req_id: int, upto_index: int) -> None:
+        """Blocks [0, upto_index) of the request are fully written."""
+        for bid in self._by_req.get(req_id, [])[:upto_index]:
+            self._blocks[bid].synced = True
+
+    # -- eager rotation ---------------------------------------------------------
+    def eager_candidates(self, limit: int,
+                         exclude_reqs: Set[int] = frozenset()) -> List[TransferDesc]:
+        """Synced HBM-only blocks to copy to DRAM in the background."""
+        descs = []
+        for b in self._blocks.values():
+            if len(descs) >= limit or not self._dram_free:
+                break
+            if (b.loc == BlockLoc.HBM and b.synced and not b.d2h_inflight
+                    and b.req_id not in exclude_reqs):
+                b.dram_slot = self._dram_free.pop()
+                b.d2h_inflight = True
+                descs.append(self._desc(b, "d2h"))
+        return descs
+
+    def complete_d2h(self, block_id: int) -> None:
+        b = self._blocks.get(block_id)
+        if b is None:
+            return
+        b.d2h_inflight = False
+        if b.loc == BlockLoc.HBM:
+            b.loc = BlockLoc.BOTH
+        self.eager_d2h_blocks += 1
+
+    # -- preemption (swap-out) ----------------------------------------------------
+    def preempt(self, req_id: int) -> List[TransferDesc]:
+        """Rotate a request out of HBM. BOTH blocks are freed instantly; only
+        blocks without a DRAM copy need a transfer. Returns D2H descriptors;
+        call complete_swap_out(req_id) when they land."""
+        descs = []
+        for bid in self._by_req.get(req_id, []):
+            b = self._blocks[bid]
+            if b.loc == BlockLoc.BOTH:
+                self._release_hbm(b)
+                b.loc = BlockLoc.DRAM
+                self.preempt_free_blocks += 1
+            elif b.loc == BlockLoc.HBM:
+                if b.d2h_inflight:      # eager copy already in flight: let it land
+                    continue
+                if not self._dram_free:
+                    raise OutOfBlocks("DRAM exhausted during preemption")
+                b.dram_slot = self._dram_free.pop()
+                b.d2h_inflight = True
+                descs.append(self._desc(b, "d2h"))
+                self.preempt_d2h_blocks += 1
+        return descs
+
+    def complete_swap_out(self, req_id: int) -> None:
+        """All D2H for a preempted request landed: drop HBM residency."""
+        for bid in self._by_req.get(req_id, []):
+            b = self._blocks[bid]
+            b.d2h_inflight = False
+            if b.loc in (BlockLoc.HBM, BlockLoc.BOTH):
+                self._release_hbm(b)
+                b.loc = BlockLoc.DRAM
+                b.synced = True
+
+    # -- swap-in ---------------------------------------------------------------
+    def swap_in(self, req_id: int) -> List[TransferDesc]:
+        descs = []
+        need = [self._blocks[bid] for bid in self._by_req.get(req_id, [])
+                if self._blocks[bid].loc == BlockLoc.DRAM]
+        if len(self._hbm_free) < len(need):
+            raise OutOfBlocks("HBM exhausted during swap-in")
+        for b in need:
+            b.hbm_slot = self._hbm_free.pop()
+            b.h2d_inflight = True
+            descs.append(self._desc(b, "h2d"))
+            self.swapin_h2d_blocks += 1
+        return descs
+
+    def complete_swap_in(self, req_id: int) -> None:
+        for bid in self._by_req.get(req_id, []):
+            b = self._blocks[bid]
+            if b.h2d_inflight:
+                b.h2d_inflight = False
+                b.loc = BlockLoc.BOTH   # DRAM copy retained (free re-preempt)
+
+    # -- finish -----------------------------------------------------------------
+    def free_request(self, req_id: int) -> None:
+        for bid in self._by_req.pop(req_id, []):
+            b = self._blocks.pop(bid)
+            if b.hbm_slot is not None and b.loc in (BlockLoc.HBM, BlockLoc.BOTH):
+                self._hbm_free.append(b.hbm_slot)
+            if b.dram_slot is not None and b.loc in (BlockLoc.DRAM, BlockLoc.BOTH):
+                self._dram_free.append(b.dram_slot)
+
+    # -- invariants (tested) ------------------------------------------------------
+    def check_invariants(self) -> None:
+        hbm_used = set()
+        dram_used = set()
+        for b in self._blocks.values():
+            if b.loc in (BlockLoc.HBM, BlockLoc.BOTH):
+                assert b.hbm_slot is not None
+                assert b.hbm_slot not in hbm_used, "HBM slot double-booked"
+                hbm_used.add(b.hbm_slot)
+            if b.loc in (BlockLoc.DRAM, BlockLoc.BOTH) or b.d2h_inflight:
+                assert b.dram_slot is not None
+                assert b.dram_slot not in dram_used, "DRAM slot double-booked"
+                dram_used.add(b.dram_slot)
+            assert not (b.d2h_inflight and b.h2d_inflight), \
+                "block is both swap-in dst and swap-out src (data race)"
+        assert not (hbm_used & set(self._hbm_free)), "freed slot still in use"
+        assert len(hbm_used) + len(self._hbm_free) <= self.num_hbm_blocks
+
+    # -- helpers --------------------------------------------------------------
+    def _release_hbm(self, b: Block) -> None:
+        if b.hbm_slot is not None:
+            self._hbm_free.append(b.hbm_slot)
+            b.hbm_slot = None
+
+    def _desc(self, b: Block, direction: str) -> TransferDesc:
+        src = b.hbm_slot if direction == "d2h" else b.dram_slot
+        dst = b.dram_slot if direction == "d2h" else b.hbm_slot
+        return TransferDesc(b.block_id, b.req_id, direction, src, dst,
+                            self.block_bytes, self.segments_per_block)

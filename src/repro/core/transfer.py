@@ -1,0 +1,114 @@
+"""Link transfer-time model + the four engine modes of paper Table 1.
+
+Modes:
+  naive   — layer-first layout: each block is N_layers small segments, each
+            issued as its own copy (vLLM behaviour);
+  ms      — block-first layout (merged segments): one big segment per block,
+            still one launch per segment;
+  ms_mk   — + merged (batched) kernel: one launch per direction, the whole
+            direction streams at the large-transfer rate; directions remain
+            SERIALIZED (swap-in waits for swap-out: the data race);
+  duplex  — + eager block rotation removed the race: both directions run
+            concurrently, jointly capped by the host-DRAM bandwidth.
+
+Timing is a discrete model over the calibrated ``LinkProfile`` bandwidth
+curve (configs.base); validated against the paper's Table 1 in
+benchmarks/bench_transfer_engine.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+from repro.configs.base import HardwareProfile, LinkProfile
+from repro.core.blocktable import TransferDesc
+
+MODES = ("naive", "ms", "ms_mk", "duplex")
+
+
+@dataclasses.dataclass
+class TransferStats:
+    d2h_bytes: int = 0
+    h2d_bytes: int = 0
+    d2h_time: float = 0.0
+    h2d_time: float = 0.0
+    e2e_time: float = 0.0
+    launches: int = 0
+
+
+class TransferEngine:
+    def __init__(self, link: LinkProfile, mode: str = "duplex"):
+        assert mode in MODES, mode
+        self.link = link
+        self.mode = mode
+
+    # -- per-direction time ----------------------------------------------------
+    def _direction_time(self, descs: Sequence[TransferDesc]) -> Tuple[float, int, int]:
+        """Returns (seconds, launches, bytes) for one direction."""
+        if not descs:
+            return 0.0, 0, 0
+        total = sum(d.nbytes for d in descs)
+        if self.mode == "naive":
+            # layer-first: every (layer, block) segment is its own launch
+            t = 0.0
+            n = 0
+            for d in descs:
+                seg = d.nbytes // max(d.segments, 1)
+                t += d.segments * (seg / self.link.effective_bw(seg))
+                n += d.segments
+            return t, n, total
+        if self.mode == "ms":
+            # block-first merged segment, one launch per block
+            t = sum(d.nbytes / self.link.effective_bw(d.nbytes) for d in descs)
+            return t, len(descs), total
+        # ms_mk / duplex: single batched launch per direction, streams at the
+        # large-transfer rate
+        stream_bw = self.link.effective_bw(max(total, descs[0].nbytes))
+        t = self.link.launch_us * 1e-6 + total / stream_bw
+        return t, 1, total
+
+    # -- both directions ---------------------------------------------------------
+    def execute(self, d2h: Sequence[TransferDesc],
+                h2d: Sequence[TransferDesc]) -> TransferStats:
+        t_d2h, n1, b1 = self._direction_time(d2h)
+        t_h2d, n2, b2 = self._direction_time(h2d)
+        if self.mode == "duplex":
+            # concurrent directions, jointly capped by host-DRAM bandwidth
+            cap = self.link.duplex_total_bw / 2
+            t_d2h = max(t_d2h, b1 / cap if b1 else 0.0)
+            t_h2d = max(t_h2d, b2 / cap if b2 else 0.0)
+            e2e = max(t_d2h, t_h2d)
+        else:
+            # data race on shared HBM slots serializes the directions
+            e2e = t_d2h + t_h2d
+        return TransferStats(d2h_bytes=b1, h2d_bytes=b2, d2h_time=t_d2h,
+                             h2d_time=t_h2d, e2e_time=e2e, launches=n1 + n2)
+
+    def ideal_duplex_time(self, d2h_bytes: int, h2d_bytes: int) -> float:
+        cap = self.link.dram_total_bw / 2
+        return max(d2h_bytes / cap if d2h_bytes else 0.0,
+                   h2d_bytes / cap if h2d_bytes else 0.0)
+
+    # effective blocks/s the engine can rotate (used to set B_xfer)
+    def sustained_block_rate(self, block_bytes: int, segments: int) -> float:
+        d = TransferDesc(0, 0, "d2h", 0, 0, block_bytes, segments)
+        t, _, _ = self._direction_time([d] * 64)
+        per_block = t / 64
+        if self.mode == "duplex":
+            per_block = max(per_block,
+                            block_bytes / (self.link.duplex_total_bw / 2))
+        return 1.0 / per_block if per_block > 0 else float("inf")
+
+
+def engine_for_flags(hw: HardwareProfile, *, block_first: bool,
+                     batched_kernel: bool, duplex: bool) -> TransferEngine:
+    """Map ServingConfig feature flags onto a Table-1 mode."""
+    if not block_first:
+        mode = "naive"
+    elif not batched_kernel:
+        mode = "ms"
+    elif not duplex:
+        mode = "ms_mk"
+    else:
+        mode = "duplex"
+    return TransferEngine(hw.link, mode)

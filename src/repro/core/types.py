@@ -1,0 +1,85 @@
+"""Request model + states shared by the scheduler, engine and block manager."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+from repro.configs.base import SLOConfig
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"    # arrived, no KV on HBM yet (or prefill not started)
+    RUNNING = "running"    # scheduled on GPU, KV resident in HBM
+    ROTARY = "rotary"      # paused, KV swapped to DRAM (paper's rotary state)
+    SWAPPING_IN = "swapping_in"    # H2D in flight
+    SWAPPING_OUT = "swapping_out"  # D2H in flight
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    arrival_time: float
+    prompt_len: int
+    output_len: int                  # target generation length (oracle for sim)
+    slo: SLOConfig = dataclasses.field(default_factory=SLOConfig)
+
+    state: RequestState = RequestState.WAITING
+    prompt_ids: Optional[List[int]] = None    # real-execution mode
+    generated_ids: List[int] = dataclasses.field(default_factory=list)
+    tokens_generated: int = 0
+    prefill_pos: int = 0             # chunked-prefill progress (tokens done)
+    t_first_token: Optional[float] = None
+    t_last_token: Optional[float] = None   # time of last generated token
+    t_run_start: Optional[float] = None    # time entering RUNNING
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    finish_time: Optional[float] = None
+    # number of rotations (preemptions) this request experienced
+    rotations: int = 0
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.prefill_pos >= self.prompt_len
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.tokens_generated
+
+    @property
+    def done(self) -> bool:
+        return self.tokens_generated >= self.output_len
+
+    def blocks_needed(self, block_size: int, lookahead: int = 0) -> int:
+        """Blocks to hold current KV (+ lookahead new tokens)."""
+        toks = min(self.total_len + lookahead, self.prompt_len + self.output_len)
+        return -(-max(toks, 1) // block_size)
+
+    # -- metrics -------------------------------------------------------------
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.arrival_time
+
+    def tbt_values(self) -> List[float]:
+        ts = self.token_times
+        return [b - a for a, b in zip(ts, ts[1:])]
+
+    def ttft_ok(self) -> Optional[bool]:
+        t = self.ttft()
+        return None if t is None else t <= self.slo.ttft_s
+
+    def tbt_ok(self) -> Optional[bool]:
+        """Per-request TBT attainment: mean TBT within SLO (occasional
+        rotation gaps amortize across the stream, matching the paper's
+        'comparable TBT under rotation' accounting)."""
+        vals = self.tbt_values()
+        if not vals:
+            return True
+        return sum(vals) / len(vals) <= self.slo.tbt_s
+
+    def tbt_ok_strict(self) -> Optional[bool]:
+        vals = self.tbt_values()
+        if not vals:
+            return True
+        return max(vals) <= self.slo.tbt_s

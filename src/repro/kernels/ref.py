@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        kv_len=None) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Skv, H, D) (same head count — pre-repeated).
+    Full materialized attention in fp32."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        off = Skv - Sq  # q positions are the last Sq of the kv stream
+        mask &= kpos <= qpos + off
+    if window > 0:
+        off = Skv - Sq
+        mask &= kpos > qpos + off - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def paged_attention_ref(q: jax.Array, kv_pool: jax.Array,
+                        block_tables: jax.Array,
+                        context_lens: jax.Array) -> jax.Array:
+    """Decode attention over a block-first paged pool.
+
+    q: (B, H, D); kv_pool: (NB, 2, P, Hkv, D) (block-first: all of a logical
+    block contiguous); block_tables: (B, MB) int32; context_lens: (B,).
+    """
+    B, H, D = q.shape
+    NB, _, P, Hkv, _ = kv_pool.shape
+    MB = block_tables.shape[1]
+    group = H // Hkv
+
+    k = kv_pool[block_tables.reshape(-1), 0]   # (B*MB, P, Hkv, D)
+    v = kv_pool[block_tables.reshape(-1), 1]
+    k = k.reshape(B, MB * P, Hkv, D)
+    v = v.reshape(B, MB * P, Hkv, D)
+    qg = q.reshape(B, Hkv, group, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) / (D ** 0.5)
+    pos = jnp.arange(MB * P)[None]
+    s = jnp.where((pos < context_lens[:, None])[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def kv_copy_ref(pool: jax.Array, src: jax.Array, dst: jax.Array,
+                n_valid=None) -> jax.Array:
+    """Batched block rotation: pool[dst[i]] = pool[src[i]] for i < n_valid.
+
+    pool: (NB, ...); src/dst: (N,) int32. Entries with i >= n_valid (or
+    src[i] < 0) are no-ops.
+    """
+    N = src.shape[0]
+    valid = jnp.arange(N) < (N if n_valid is None else n_valid)
+    valid &= src >= 0
+    rows = pool[jnp.where(valid, src, 0)]
+    safe_dst = jnp.where(valid, dst, pool.shape[0])  # OOB => dropped
+    return pool.at[safe_dst].set(rows, mode="drop")

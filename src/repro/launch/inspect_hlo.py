@@ -1,0 +1,97 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Hillclimb profiler: compile a 1-period UNROLLED variant of a cell and
+print the top collectives by payload bytes, with op_name metadata — this is
+the 'profile' the §Perf hypothesis loop reads (no real-TPU timings exist;
+the lowered IR is the evidence).
+
+    PYTHONPATH=src python -m repro.launch.inspect_hlo --arch llama3-405b \
+        --shape decode_32k [--microbatches 1] [--top 20]
+"""
+import argparse
+import collections
+import dataclasses
+import re
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--periods", type=int, default=1)
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--opt", action="append", default=[],
+                    help="k=v overrides passed to make_step_bundle")
+    args = ap.parse_args()
+
+    import jax
+    from jax.sharding import NamedSharding
+    from repro.configs import SHAPES, get_config
+    from repro.distributed.sharding import pspec_for, rules_for_shape, sharding_ctx
+    from repro.launch.dryrun import _axes_leaf, _depth_variant
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.api import make_step_bundle
+    from repro.models.lm import build_program
+
+    opts = {}
+    for kv in args.opt:
+        k, v = kv.split("=", 1)
+        opts[k] = int(v) if v.isdigit() else v
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    p = len(build_program(cfg)[0].pattern)
+    var = _depth_variant(cfg, args.periods, p)
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    rules = rules_for_shape(shape.kind, shape.global_batch)
+    with sharding_ctx(mesh, rules):
+        b = make_step_bundle(var, shape, microbatches=args.microbatches,
+                             unroll=True, **opts)
+        in_sh = jax.tree.map(
+            lambda l: NamedSharding(mesh, pspec_for(l[0] or (), mesh, rules, l[1])),
+            b.args_axes, is_leaf=_axes_leaf)
+        comp = jax.jit(b.fn, in_shardings=in_sh,
+                       donate_argnums=b.donate).lower(*b.args_structs).compile()
+    txt = comp.as_text()
+
+    sh_re = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+    bts = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "f16": 2, "pred": 1,
+           "s8": 1, "u8": 1, "f64": 8, "s64": 8}
+    rows = []
+    agg = collections.Counter()
+    for line in txt.splitlines():
+        m = re.match(r"\s*(?:ROOT )?%?[\w.\-]+ = (.*?) "
+                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)(?:-start)?\(", line)
+        if not m:
+            continue
+        lhs, op = m.groups()
+        nbytes = 0
+        for dt, dims in sh_re.findall(lhs):
+            if dt in bts:
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                nbytes += n * bts[dt]
+        name = re.search(r'op_name="([^"]*)"', line)
+        nm = name.group(1) if name else "?"
+        rows.append((nbytes, op, lhs.strip()[:48], nm[-90:]))
+        agg[(op, nm.split("/")[-1][:60])] += nbytes
+
+    total = sum(r[0] for r in rows)
+    print(f"# {args.arch} {args.shape} periods={args.periods} "
+          f"mb={args.microbatches} opts={opts}: {len(rows)} collectives, "
+          f"{total/2**20:.1f} MiB/device (this slice)")
+    print(f"{'MiB':>9}  {'op':18} source")
+    for (op, nm), nbytes in agg.most_common(args.top):
+        print(f"{nbytes/2**20:9.2f}  {op:18} {nm}")
+    ca = comp.cost_analysis()
+    print(f"# flops={ca['flops']:.3e} bytes={ca.get('bytes accessed', 0):.3e}")
+
+
+if __name__ == "__main__":
+    main()

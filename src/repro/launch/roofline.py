@@ -1,0 +1,220 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Terms (per instructions; v5e constants):
+    compute    = HLO_FLOPs_per_device / 197e12
+    memory     = HLO_bytes_per_device / 819e9
+    collective = collective_bytes_per_device / 50e9
+
+collective bytes are parsed from the post-SPMD HLO text: we sum the *result*
+shape bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (payload-bytes convention; ring-algorithm factors like
+2(N-1)/N for all-reduce are not applied — documented in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import HardwareProfile, ModelConfig, ShapeConfig, TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# matches e.g.:  %ar = bf16[8,128]{1,0} all-reduce(...)   or tuple results
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind result-payload bytes (per-device program)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k + "_count": 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        lhs, op = m.group(1), m.group(2)
+        if "-done" in line.split("=")[1][:40]:
+            continue
+        out[op] += _shape_bytes(lhs)
+        counts[op + "_count"] += 1
+    out.update(counts)
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """'Useful' FLOPs per step: 6·N_active·D (train) / 2·N_active·D (fwd)
+    + exact-causal attention term (and window/SSD variants)."""
+    B, S = shape.global_batch, shape.seq_len
+    n_act = cfg.active_param_count()
+    # embedding params don't do matmul work per token; subtract lookups
+    n_matmul = n_act - cfg.vocab_size * cfg.d_model  # keep lm_head, drop embed
+    attn = 0.0
+    for i in range(cfg.num_layers):
+        if cfg.layer_kind(i) != "attn":
+            # SSD: intra-chunk ~ 2*S*Q*(H*P) for y_diag + 2*S*Q*N for cb
+            if cfg.ssm is not None:
+                Q = cfg.ssm.chunk_size
+                d_in = cfg.ssm.expand * cfg.d_model
+                N = cfg.ssm.state_dim
+                H = d_in // cfg.ssm.head_dim
+                if shape.kind == "decode":
+                    attn += 2 * B * d_in * N * 2
+                else:
+                    attn += 2 * B * S * Q * (d_in + N) / 2 + 4 * B * S * d_in * N
+            continue
+        eff = S if (cfg.layer_is_global(i) or not cfg.attn.sliding_window) \
+            else min(cfg.attn.sliding_window, S)
+        hq = cfg.num_heads * cfg.head_dim
+        if shape.kind == "decode":
+            attn += 4 * B * eff * hq          # QK + AV over cache
+        else:
+            attn += 4 * B * S * eff * hq / 2  # causal half
+    if shape.kind == "decode":
+        tok = B
+        fwd = 2 * n_matmul * tok + attn
+        return fwd
+    tok = B * S
+    fwd = 2 * n_matmul * tok + attn
+    if shape.kind == "train":
+        return 3 * fwd
+    return fwd
+
+
+def analytic_memory_bytes(cfg: ModelConfig, shape: ShapeConfig, *,
+                          weights_local: float, opt_local: float,
+                          cache_local: float, data_shards: int,
+                          model_shards: int, fsdp_shards: int,
+                          microbatches: int = 1,
+                          flash_chunk_q: int = 512) -> Dict[str, float]:
+    """First-principles per-device HBM traffic model (bytes/step).
+
+    XLA-CPU ``bytes accessed`` counts while-loop tuple plumbing and aliased
+    cache updates as full-buffer traffic, so it does not transfer to TPU; this
+    model replaces it (see EXPERIMENTS.md §Method for the formulas and their
+    assumptions). Components:
+
+    - decode: local weights read once (2D weight-stationary — no gathering;
+      MoE experts scaled by routed-activity), full local KV/state read,
+      logits write.
+    - prefill: per-layer FSDP weight all-gather (write + read the gathered
+      copy), ~12 activation streams per layer, flash K/V re-streamed once per
+      Q-chunk, KV cache write.
+    - train: 3 passes (fwd, remat-fwd, bwd) of gathered weights per
+      microbatch, activation streams, gradient accumulation read+write,
+      optimizer state read+write.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    L = cfg.num_layers + cfg.num_encoder_layers
+    bpe = 2  # bf16
+    out: Dict[str, float] = {}
+    if shape.kind == "decode":
+        act = 1.0
+        if cfg.moe is not None:
+            # fraction of local expert weights touched by routed tokens
+            tokens = B * cfg.moe.top_k
+            act_moe = min(1.0, tokens / cfg.moe.num_experts)
+            moe_frac = 1 - cfg.active_param_count() / cfg.param_count()
+            # weights_local includes all experts; scale the expert part
+            act = (1 - moe_frac) + moe_frac * act_moe
+        out["weights"] = weights_local * act
+        out["kv"] = cache_local
+        out["logits"] = B * cfg.vocab_size / model_shards * 4
+    elif shape.kind == "prefill":
+        b_loc = max(B // data_shards, 1)
+        gathered = weights_local * fsdp_shards
+        out["weights"] = 2 * gathered
+        out["activations"] = 12 * L * b_loc * S * d * bpe
+        nq = max(S // flash_chunk_q, 1)
+        kv_layer = b_loc * S * cfg.num_kv_heads * cfg.head_dim * 2 * bpe
+        out["flash_kv_restream"] = cfg.num_attn_layers * nq * kv_layer / model_shards
+        out["kv_write"] = cache_local
+        out["logits"] = b_loc * cfg.vocab_size / model_shards * (2 + 4)
+    else:  # train
+        b_loc = max(B // data_shards, 1)
+        b_mb = max(b_loc // microbatches, 1)
+        gathered = weights_local * fsdp_shards
+        out["weights"] = microbatches * 3 * 2 * gathered
+        out["activations"] = microbatches * 14 * L * b_mb * S * d * bpe
+        nq = max(S // flash_chunk_q, 1)
+        kv_layer = b_mb * S * cfg.num_kv_heads * cfg.head_dim * 2 * bpe
+        out["flash_kv_restream"] = (3 * microbatches * cfg.num_attn_layers
+                                    * nq * kv_layer / model_shards)
+        grad_local = weights_local * 2  # fp32 accum buffer r+w
+        out["grads"] = microbatches * 2 * grad_local
+        out["optimizer"] = 2 * opt_local + 2 * weights_local
+        out["logits"] = microbatches * b_mb * S * cfg.vocab_size / model_shards * (2 + 4)
+    out["total"] = sum(out.values())
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float,
+                   hw: HardwareProfile = TPU_V5E) -> Dict[str, float]:
+    compute = flops_per_dev / hw.flops_bf16
+    memory = bytes_per_dev / hw.hbm_bw
+    collective = coll_bytes_per_dev / hw.ici_bw
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    terms["step_s_lower_bound"] = max(compute, memory, collective)
+    return terms
+
+
+def summarize(cfg: ModelConfig, shape: ShapeConfig, num_devices: int,
+              cost: Optional[dict], coll: Dict[str, int],
+              memory_model: Optional[Dict[str, float]] = None,
+              hw: HardwareProfile = TPU_V5E) -> Dict:
+    flops_dev = float(cost.get("flops", 0.0)) if cost else 0.0
+    xla_bytes_dev = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+    bytes_dev = (memory_model or {}).get("total", xla_bytes_dev)
+    coll_dev = float(sum(v for k, v in coll.items() if not k.endswith("_count")))
+    mf = model_flops(cfg, shape)
+    terms = roofline_terms(flops_dev, bytes_dev, coll_dev, hw)
+    ideal_s = mf / (num_devices * hw.flops_bf16)
+    achieved = terms["step_s_lower_bound"]
+    # hardware-roofline fraction: the memory term already models the
+    # *irreducible* traffic (weights+state read once), so the binding
+    # roofline is max(ideal compute, intrinsic memory); the fraction is how
+    # close the achieved lower-bound sits to that binding roof.
+    intrinsic = max(ideal_s, terms["memory_s"])
+    return {
+        "roofline_fraction_hw": (intrinsic / achieved) if achieved else 0.0,
+        "hlo_flops_per_device": flops_dev,
+        "memory_bytes_per_device": bytes_dev,
+        "memory_model": memory_model,
+        "xla_bytes_accessed_per_device_raw": xla_bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "collective_detail": coll,
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / (flops_dev * num_devices)
+                               if flops_dev else 0.0),
+        "ideal_step_s": ideal_s,
+        "roofline_fraction": (ideal_s / achieved) if achieved else 0.0,
+        **terms,
+    }

@@ -1,0 +1,76 @@
+"""Serving launcher: run the SuperInfer engine (simulated device timing
+around the real scheduler/block-table/transfer stack) and print SLO metrics.
+
+    PYTHONPATH=src python -m repro.launch.serve --model qwen2.5-32b \
+        --scheduler rotasched --rps 20 --duration 40
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="qwen2.5-32b")
+    ap.add_argument("--scheduler", default="rotasched",
+                    choices=["rotasched", "fcfs", "wf", "sf", "sjf", "ltr",
+                             "lightllm"])
+    ap.add_argument("--dataset", default="sharegpt",
+                    choices=["sharegpt", "lmsys"])
+    ap.add_argument("--rps", type=float, default=20.0)
+    ap.add_argument("--duration", type=float, default=40.0)
+    ap.add_argument("--hw", default="gh200",
+                    choices=["gh200", "h200-pcie", "tpu-v5e"])
+    ap.add_argument("--hbm-blocks", type=int, default=4000)
+    ap.add_argument("--dram-blocks", type=int, default=100000)
+    ap.add_argument("--alpha", type=float, default=3.0)
+    ap.add_argument("--beta-b", type=float, default=0.0)
+    ap.add_argument("--beta-f", type=float, default=0.5)
+    ap.add_argument("--b-xfer", type=int, default=0, help="0 = auto")
+    ap.add_argument("--no-duplex", action="store_true")
+    ap.add_argument("--no-eager", action="store_true")
+    ap.add_argument("--no-block-first", action="store_true")
+    ap.add_argument("--no-pipeline", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.configs import HW_PROFILES, RotaSchedConfig, ServingConfig, get_config
+    from repro.serving.engine import ServingEngine
+    from repro.serving.workload import generate_requests
+
+    cfg = get_config(args.model)
+    rot = RotaSchedConfig(alpha=args.alpha, beta_b=args.beta_b,
+                          beta_f=args.beta_f,
+                          b_xfer=args.b_xfer if args.b_xfer else 2400)
+    sv = ServingConfig(
+        num_hbm_blocks=args.hbm_blocks, num_dram_blocks=args.dram_blocks,
+        scheduler=args.scheduler, rotary=rot,
+        auto_b_xfer=(args.b_xfer == 0),
+        duplex=not args.no_duplex, eager_rotation=not args.no_eager,
+        block_first_layout=not args.no_block_first,
+        batched_transfer_kernel=not args.no_block_first,
+        pipeline_overlap=not args.no_pipeline)
+    hw = HW_PROFILES[args.hw]
+    reqs = generate_requests(args.dataset, args.rps, args.duration,
+                             seed=args.seed)
+    eng = ServingEngine(cfg, sv, hw)
+    rep = eng.run(reqs)
+    row = rep.row()
+    row.update(scheduler=args.scheduler, model=args.model, rps=args.rps,
+               active_rotations=eng.stats.active_rotations,
+               passive_preemptions=eng.stats.passive_preemptions,
+               eager_blocks=eng.stats.eager_blocks,
+               stall_time=round(eng.stats.stall_time, 3))
+    if args.json:
+        print(json.dumps(row, indent=1))
+    else:
+        for k, v in row.items():
+            print(f"{k:22s} {v}")
+    return row
+
+
+if __name__ == "__main__":
+    main()

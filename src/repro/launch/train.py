@@ -1,0 +1,125 @@
+"""Training launcher: config -> mesh -> data -> train loop with checkpoints,
+deterministic resume, and an iteration watchdog (straggler telemetry).
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --reduced \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt --ckpt-every 20
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced (CPU-sized) config")
+    ap.add_argument("--width", type=int, default=0,
+                    help="override d_model (build ~100M-class models on CPU)")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--moments-dtype", default="float32",
+                    choices=["float32", "bfloat16", "int8"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--mesh", default="", help="e.g. '2,2' => (data,model)")
+    ap.add_argument("--watchdog-factor", type=float, default=3.0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config
+    from repro.checkpoint.ckpt import CheckpointManager
+    from repro.data.pipeline import Prefetcher, SyntheticPacked
+    from repro.distributed.sharding import (ShardingRules, sharding_ctx,
+                                            TRAIN_RULES)
+    from repro.launch.mesh import make_mesh
+    from repro.models.lm import LM
+    from repro.optimizer.adamw import AdamWConfig
+    from repro.training import step as steplib
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.width:
+        cfg = dataclasses.replace(cfg, d_model=args.width)
+    if args.layers:
+        cfg = dataclasses.replace(cfg, num_layers=args.layers)
+
+    mesh = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        mesh = make_mesh(shape, ("data", "model")[:len(shape)])
+
+    lm = LM(cfg)
+    opt_cfg = AdamWConfig(lr=args.lr, moments_dtype=args.moments_dtype)
+    train_step = steplib.make_train_step(lm, opt_cfg,
+                                         microbatches=args.microbatches)
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"devices={jax.device_count()}")
+
+    data = SyntheticPacked(cfg.vocab_size, args.seq, args.batch,
+                           seed=args.seed)
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    ctx = sharding_ctx(mesh, TRAIN_RULES) if mesh is not None else _null_ctx()
+    with ctx:
+        state = steplib.init_train_state(lm, jax.random.PRNGKey(args.seed),
+                                         opt_cfg)
+        start = 0
+        if ckpt and args.resume and ckpt.latest_step() is not None:
+            start = ckpt.latest_step()
+            state = ckpt.restore(start, state)
+            data.skip_to(start)
+            print(f"resumed from step {start}")
+
+        jitted = jax.jit(train_step, donate_argnums=(0,))
+        it = Prefetcher(iter(data))
+        ema = None
+        losses = []
+        for step_i in range(start, args.steps):
+            batch = {k: jax.numpy.asarray(v) for k, v in next(it).items()}
+            t0 = time.time()
+            state, metrics = jitted(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            # watchdog: flag straggler iterations
+            if ema is not None and dt > args.watchdog_factor * ema:
+                print(f"[watchdog] step {step_i} took {dt*1e3:.0f}ms "
+                      f"({dt/ema:.1f}x EMA) — straggler")
+            ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+            losses.append(loss)
+            if step_i % args.log_every == 0:
+                print(f"step {step_i:5d} loss {loss:.4f} "
+                      f"({dt*1e3:.0f} ms, grad_norm "
+                      f"{float(metrics['grad_norm']):.3f})")
+            if ckpt and (step_i + 1) % args.ckpt_every == 0:
+                ckpt.save(step_i + 1, state, async_=True)
+        if ckpt:
+            ckpt.save(args.steps, state)
+            ckpt.wait()
+        it.close()
+        print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+        return losses
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

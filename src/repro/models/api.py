@@ -1,0 +1,172 @@
+"""Public model API: build step functions + ShapeDtypeStruct input specs for
+every (architecture × input shape) cell. Used by the dry-run, the trainer,
+and the serving engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.common import (ArraySpec, specs_logical_axes,
+                                 specs_to_structs, specs_to_zeros)
+from repro.models.lm import LM
+from repro.optimizer import adamw
+from repro.training import step as train_step_lib
+
+
+def recommended_microbatches(cfg: ModelConfig) -> int:
+    """Grad-accumulation microbatches for train_4k (baseline knob)."""
+    n = cfg.param_count()
+    if n >= 100e9:
+        return 16
+    if cfg.ssm is not None or cfg.vocab_size >= 200_000:
+        return 8
+    if n >= 8e9:
+        return 8
+    return 4
+
+
+def _frontend_len(cfg: ModelConfig) -> int:
+    return cfg.frontend.num_embeds if cfg.frontend.kind != "none" else 0
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, ArraySpec]:
+    """ArraySpec tree for the step's data inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    F = _frontend_len(cfg)
+    is_encdec = cfg.num_encoder_layers > 0
+    out: Dict[str, ArraySpec] = {}
+    if shape.kind in ("train", "prefill"):
+        tok_len = S - F if (F and not is_encdec) else S
+        out["tokens"] = ArraySpec((B, tok_len), "int32", ("batch", None))
+        if shape.kind == "train":
+            out["labels"] = ArraySpec((B, tok_len), "int32", ("batch", None))
+            out["mask"] = ArraySpec((B, tok_len), "float32", ("batch", None))
+        if F and not is_encdec:
+            out["embeds"] = ArraySpec((B, F, cfg.frontend.embed_dim),
+                                      "bfloat16", ("batch", None, None))
+        if is_encdec:
+            out["src_embeds"] = ArraySpec((B, F, cfg.frontend.embed_dim),
+                                          "bfloat16", ("batch", None, None))
+    else:  # decode
+        out["token"] = ArraySpec((B,), "int32", ("batch",))
+        out["cache_len"] = ArraySpec((), "int32", ())
+    return out
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to lower one (arch × shape) cell."""
+    kind: str
+    fn: Any                      # jit-able callable
+    args_structs: Tuple          # positional args as ShapeDtypeStructs
+    args_axes: Tuple             # logical axes tree matching args
+    out_axes: Any = None         # logical axes for outputs (or None: infer)
+    donate: Tuple[int, ...] = ()
+    static_meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # (structs_subtree, axes_subtree) per memory-model group
+    byte_groups: Dict[str, Tuple] = dataclasses.field(default_factory=dict)
+
+
+def make_step_bundle(cfg: ModelConfig, shape: ShapeConfig, *,
+                     opt_cfg: Optional[adamw.AdamWConfig] = None,
+                     microbatches: Optional[int] = None,
+                     remat: bool = True, unroll: bool = False,
+                     remat_group: int = 1, moments_dtype: str = "float32",
+                     accum_dtype: str = "float32") -> StepBundle:
+    lm = LM(cfg, scan_unroll=unroll, remat_group=remat_group)
+    bspecs = batch_specs(cfg, shape)
+    batch_structs = specs_to_structs(bspecs)
+    batch_axes = specs_logical_axes(bspecs)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or adamw.AdamWConfig(moments_dtype=moments_dtype)
+        mb = microbatches or recommended_microbatches(cfg)
+        # per-microbatch batch must stay divisible by the batch-shard count
+        from repro.distributed import sharding as _sh
+        mesh = _sh.current_mesh()
+        if mesh is not None:
+            ba = _sh.batch_axes(mesh, None)
+            shards = 1
+            for a in ((ba,) if isinstance(ba, str) else (ba or ())):
+                shards *= mesh.shape[a]
+            while mb > 1 and (shape.global_batch // mb) % shards != 0:
+                mb //= 2
+        fn = train_step_lib.make_train_step(lm, opt_cfg, microbatches=mb,
+                                            remat=remat, unroll=unroll,
+                                            accum_dtype=accum_dtype)
+        state_structs = train_step_lib.train_state_structs(lm, opt_cfg)
+        state_axes = train_step_lib.train_state_logical_axes(lm, opt_cfg)
+        return StepBundle("train", fn, (state_structs, batch_structs),
+                          (state_axes, batch_axes), donate=(0,),
+                          static_meta={"microbatches": mb,
+                                       "remat_group": remat_group,
+                                       "moments_dtype": moments_dtype,
+                                       "accum_dtype": accum_dtype},
+                          byte_groups={
+                              "weights": (state_structs.params, state_axes.params),
+                              "opt": (state_structs.opt, state_axes.opt)})
+
+    param_structs = lm.param_structs()
+    param_axes = lm.param_axes()
+    src_len = _frontend_len(cfg) if cfg.num_encoder_layers else 0
+
+    if shape.kind == "prefill":
+        capacity = shape.seq_len
+
+        def prefill_fn(params, batch):
+            return lm.prefill(params, batch, capacity)
+
+        cache_specs = lm.cache_specs(shape.global_batch, capacity, src_len)
+        cache_axes = specs_logical_axes(cache_specs)
+        return StepBundle("prefill", prefill_fn,
+                          (param_structs, batch_structs),
+                          (param_axes, batch_axes),
+                          out_axes=(((("batch", "vocab")), None), cache_axes),
+                          static_meta={"capacity": capacity},
+                          byte_groups={
+                              "weights": (param_structs, param_axes),
+                              "cache": (specs_to_structs(cache_specs),
+                                        cache_axes)})
+
+    # decode
+    capacity = shape.seq_len
+    cache_specs = lm.cache_specs(shape.global_batch, capacity, src_len)
+    cache_structs = specs_to_structs(cache_specs)
+    cache_axes = specs_logical_axes(cache_specs)
+
+    def decode_fn(params, caches, batch):
+        return lm.decode_step(params, caches, batch)
+
+    return StepBundle("decode", decode_fn,
+                      (param_structs, cache_structs, batch_structs),
+                      (param_axes, cache_axes, batch_axes),
+                      donate=(1,),
+                      static_meta={"capacity": capacity},
+                      byte_groups={"weights": (param_structs, param_axes),
+                                   "cache": (cache_structs, cache_axes)})
+
+
+def make_demo_inputs(cfg: ModelConfig, shape: ShapeConfig, rng=None,
+                     lm: Optional[LM] = None) -> Dict[str, jax.Array]:
+    """Concrete (small) inputs matching batch_specs — for smoke tests."""
+    import numpy as np
+    rng = np.random.default_rng(0)
+    out = {}
+    for k, s in batch_specs(cfg, shape).items():
+        if s.dtype == "int32":
+            if k == "cache_len":
+                out[k] = jnp.asarray(min(shape.seq_len - 1, 7), jnp.int32)
+            else:
+                out[k] = jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, s.shape), jnp.int32)
+        elif k == "mask":
+            out[k] = jnp.ones(s.shape, s.struct().dtype)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(s.shape), jnp.float32
+                                 ).astype(s.struct().dtype)
+    return out

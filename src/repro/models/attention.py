@@ -1,0 +1,146 @@
+"""Attention: chunked-flash (train/prefill) and dense-cache decode attention.
+
+Pure-jnp chunked online-softmax flash attention is the portable implementation
+(compiles for the CPU dry-run and for TPU); ``repro.kernels.flash_attention``
+is the Pallas TPU kernel validated against ``repro.kernels.ref``.
+
+Sharding strategy (see DESIGN.md §4):
+  - prefill/train: q heads sharded over "model" (dropped automatically when the
+    head count doesn't divide), kv replicated within a data shard.
+  - decode: q replicated over "model"; the KV cache's *sequence* dim is sharded
+    over "model" (SP). Partial softmax stats are combined by GSPMD-inserted
+    all-reduces; we pin the score layout with a sharding annotation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jax.Array, num_q_heads: int) -> jax.Array:
+    """(B, T, Hkv, D) -> (B, T, Hq, D) by repeating each kv head G times."""
+    hkv = k.shape[2]
+    if hkv == num_q_heads:
+        return k
+    group = num_q_heads // hkv
+    return jnp.repeat(k, group, axis=2)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    window: int = 0,
+                    q_offset: int = 0,
+                    chunk_q: int = 512,
+                    chunk_kv: int = 512,
+                    softmax_scale: Optional[float] = None) -> jax.Array:
+    """Chunked online-softmax attention.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D). Returns (B, Sq, Hq, D).
+    ``q_offset``: absolute position of q[0] relative to k[0] (for chunked
+    prefill continuation). ``window``: sliding window size (0 = full).
+    """
+    B, Sq, Hq, D = q.shape
+    Skv = k.shape[1]
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    k = _repeat_kv(k, Hq)
+    v = _repeat_kv(v, Hq)
+
+    cq = min(chunk_q, Sq)
+    ckv = min(chunk_kv, Skv)
+    # pad to multiples
+    pad_q = (-Sq) % cq
+    pad_kv = (-Skv) % ckv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    nq, nkv = (Sq + pad_q) // cq, (Skv + pad_kv) // ckv
+
+    qc = q.reshape(B, nq, cq, Hq, D)
+    kc = k.reshape(B, nkv, ckv, Hq, D)
+    vc = v.reshape(B, nkv, ckv, Hq, D)
+
+    q_pos = q_offset + jnp.arange(nq * cq).reshape(nq, cq)
+    kv_pos = jnp.arange(nkv * ckv).reshape(nkv, ckv)
+    kv_valid = kv_pos < Skv
+
+    def q_chunk_body(_, qi):
+        qb = qc[:, qi] * scale                          # (B, cq, Hq, D)
+        qp = q_pos[qi]                                  # (cq,)
+
+        def kv_chunk_body(carry, ki):
+            acc, m, l = carry
+            kb, vb = kc[:, ki], vc[:, ki]
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb,
+                           preferred_element_type=jnp.float32)
+            kp = kv_pos[ki]                             # (ckv,)
+            mask = kv_valid[ki][None, :]
+            if causal:
+                mask = mask & (kp[None, :] <= qp[:, None])
+            if window > 0:
+                mask = mask & (kp[None, :] > qp[:, None] - window)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, Hq, cq, D), jnp.float32)
+        m0 = jnp.full((B, Hq, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hq, cq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_chunk_body, (acc0, m0, l0),
+                                      jnp.arange(nkv))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.transpose(0, 2, 1, 3)          # (B, cq, Hq, D)
+
+    _, outs = jax.lax.scan(q_chunk_body, None, jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * cq, Hq, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     valid_from: jax.Array, valid_to: jax.Array, *,
+                     softmax_scale: Optional[float] = None) -> jax.Array:
+    """One-token attention against a dense KV cache (SP over cache seq).
+
+    q: (B, Hq, D); k_cache/v_cache: (B, S, Hkv, D); valid_from/valid_to:
+    scalars or (B,) — cache positions in [valid_from, valid_to) attend.
+    """
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    group = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qg = (q * scale).reshape(B, Hkv, group, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    s = shard(s, ("batch", None, None, "kv_seq"))
+    pos = jnp.arange(S)
+    vf = jnp.asarray(valid_from).reshape(-1, 1)         # (B or 1, 1)
+    vt = jnp.asarray(valid_to).reshape(-1, 1)
+    mask = (pos[None] >= vf) & (pos[None] < vt)          # (B?, S)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", (p / l).astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def update_cache(cache: jax.Array, new: jax.Array, pos) -> jax.Array:
+    """Write new (B, 1, Hkv, D) into cache (B, S, Hkv, D) at scalar pos."""
+    return jax.lax.dynamic_update_slice(
+        cache, new.astype(cache.dtype),
+        (0, jnp.asarray(pos, jnp.int32), 0, 0))

@@ -1,0 +1,364 @@
+"""Per-layer blocks: param defs, caches, and apply() for attn/ssm/ffn layers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import attention as attn_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import ArraySpec, ParamDef, rms_norm, apply_rope, swiglu
+from repro.models.moe import moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str            # "attn" | "ssm"
+    is_global: bool       # full attention vs sliding-window
+    ffn: str              # "dense" | "moe" | "none"
+    has_cross: bool = False
+    is_causal: bool = True
+
+    def structural_key(self) -> Tuple:
+        return (self.mixer, self.is_global, self.ffn, self.has_cross,
+                self.is_causal)
+
+
+def make_layer_spec(cfg: ModelConfig, i: int, *, decoder: bool = True) -> LayerSpec:
+    if not decoder:  # encoder layer
+        return LayerSpec("attn", True, "dense", False, is_causal=False)
+    mixer = cfg.layer_kind(i)
+    is_global = cfg.layer_is_global(i) if mixer == "attn" else True
+    ffn = "moe" if cfg.layer_is_moe(i) else (
+        "none" if cfg.family == "ssm" else "dense")
+    return LayerSpec(mixer, is_global, ffn,
+                     has_cross=cfg.cross_attention and decoder and cfg.num_encoder_layers > 0)
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+
+def _attn_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, H, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamDef((d, H, hd), ("fsdp", "heads", None)),
+        "wk": ParamDef((d, Hkv, hd), ("fsdp", "kv_heads", None)),
+        "wv": ParamDef((d, Hkv, hd), ("fsdp", "kv_heads", None)),
+        "wo": ParamDef((H, hd, d), ("heads", None, "fsdp")),
+    }
+
+
+def _ssm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, s = cfg.d_model, cfg.ssm
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    N = s.state_dim
+    W = s.conv_width
+    return {
+        "w_z": ParamDef((d, d_in), ("fsdp", "mlp")),
+        "w_x": ParamDef((d, d_in), ("fsdp", "mlp")),
+        "w_b": ParamDef((d, N), ("fsdp", None)),
+        "w_c": ParamDef((d, N), ("fsdp", None)),
+        "w_dt": ParamDef((d, H), ("fsdp", "ssm_heads")),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), "ssm_dt"),
+        "A_log": ParamDef((H,), ("ssm_heads",), "ssm_a"),
+        "D": ParamDef((H,), ("ssm_heads",), "ones"),
+        "conv_x": ParamDef((W, d_in), (None, "mlp")),
+        "conv_b": ParamDef((W, N), (None, None)),
+        "conv_c": ParamDef((W, N), (None, None)),
+        "norm_y": ParamDef((d_in,), ("mlp",), "zeros"),
+        "out_proj": ParamDef((d_in, d), ("mlp", "fsdp")),
+    }
+
+
+def layer_param_defs(cfg: ModelConfig, spec: LayerSpec) -> Dict[str, Any]:
+    d = cfg.d_model
+    defs: Dict[str, Any] = {"ln1": ParamDef((d,), (None,), "zeros")}
+    if spec.mixer == "attn":
+        defs.update(_attn_defs(cfg))
+    else:
+        defs.update(_ssm_defs(cfg))
+    if spec.has_cross:
+        defs["ln_cross"] = ParamDef((d,), (None,), "zeros")
+        for k, v in _attn_defs(cfg).items():
+            defs["c" + k] = v
+    if spec.ffn != "none":
+        defs["ln2"] = ParamDef((d,), (None,), "zeros")
+    if spec.ffn == "dense":
+        f = cfg.d_ff
+        defs["w_gate"] = ParamDef((d, f), ("fsdp", "mlp"))
+        defs["w_up"] = ParamDef((d, f), ("fsdp", "mlp"))
+        defs["w_down"] = ParamDef((f, d), ("mlp", "fsdp"))
+    elif spec.ffn == "moe":
+        m = cfg.moe
+        f = m.expert_d_ff or cfg.d_ff
+        defs["moe"] = {
+            "router": ParamDef((d, m.num_experts), ("fsdp", None)),
+            "w_gate": ParamDef((m.num_experts, d, f), ("experts", "fsdp", None)),
+            "w_up": ParamDef((m.num_experts, d, f), ("experts", "fsdp", None)),
+            "w_down": ParamDef((m.num_experts, f, d), ("experts", None, "fsdp")),
+        }
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def window_cache_size(cfg: ModelConfig, spec: LayerSpec, capacity: int) -> int:
+    """>0: use a shift-register window cache of this size; 0: full cache.
+
+    Single source of truth for prefill/decode/spec layout agreement:
+    a window cache is used iff the layer is local AND window <= capacity
+    (so decode can always distinguish it by cache_size == window).
+    """
+    if spec.mixer != "attn" or spec.is_global:
+        return 0
+    w = cfg.attn.sliding_window
+    return w if 0 < w <= capacity else 0
+
+
+def layer_cache_specs(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                      capacity: int, src_len: int = 0,
+                      dtype: str = "bfloat16") -> Dict[str, ArraySpec]:
+    """Decode-time cache for one layer (dense layout for the dry-run path)."""
+    out: Dict[str, ArraySpec] = {}
+    if spec.mixer == "attn":
+        w = window_cache_size(cfg, spec, capacity)
+        cap = w if w else capacity
+        kv = (batch, cap, cfg.num_kv_heads, cfg.head_dim)
+        axes = ("batch", "kv_seq", "kv_heads", None)
+        out["k"] = ArraySpec(kv, dtype, axes)
+        out["v"] = ArraySpec(kv, dtype, axes)
+    else:
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        H = d_in // s.head_dim
+        W = s.conv_width
+        out["conv_x"] = ArraySpec((batch, W - 1, d_in), dtype,
+                                  ("batch", None, "mlp"))
+        out["conv_b"] = ArraySpec((batch, W - 1, s.state_dim), dtype,
+                                  ("batch", None, None))
+        out["conv_c"] = ArraySpec((batch, W - 1, s.state_dim), dtype,
+                                  ("batch", None, None))
+        out["h"] = ArraySpec((batch, H, s.head_dim, s.state_dim), dtype,
+                             ("batch", "ssm_heads", None, None))
+    if spec.has_cross:
+        ckv = (batch, src_len, cfg.num_kv_heads, cfg.head_dim)
+        out["ck"] = ArraySpec(ckv, dtype, ("batch", "kv_seq", "kv_heads", None))
+        out["cv"] = ArraySpec(ckv, dtype, ("batch", "kv_seq", "kv_heads", None))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+def _qkv(h, p, prefix=""):
+    q = jnp.einsum("bsd,dhk->bshk", h, p[prefix + "wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p[prefix + "wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p[prefix + "wv"])
+    return q, k, v
+
+
+def _theta(cfg: ModelConfig, spec: LayerSpec) -> float:
+    if spec.mixer == "attn" and not spec.is_global and cfg.attn.sliding_window:
+        return 1e4  # local layers use short-theta rope (gemma3 style)
+    return cfg.rope_theta
+
+
+def _attn_seq(cfg, spec, p, x, positions, window):
+    """Full-sequence attention (train/prefill). Returns out, (k, v)."""
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    q, k, v = _qkv(h, p)
+    theta = _theta(cfg, spec)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    q = shard(q, ("batch", "seq", "heads", None))
+    out = attn_lib.flash_attention(q, k, v, causal=spec.is_causal,
+                                   window=window)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard(out, ("batch", "seq", "embed")), (k, v)
+
+
+def _cross_seq(cfg, p, x, memory):
+    h = rms_norm(x, p["ln_cross"], cfg.rms_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["cwq"])
+    ck = jnp.einsum("bsd,dhk->bshk", memory, p["cwk"])
+    cv = jnp.einsum("bsd,dhk->bshk", memory, p["cwv"])
+    out = attn_lib.flash_attention(q, ck, cv, causal=False)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["cwo"])
+    return out, (ck, cv)
+
+
+def _ssm_proj(cfg, p, h):
+    z = jnp.einsum("bsd,di->bsi", h, p["w_z"])
+    xr = jnp.einsum("bsd,di->bsi", h, p["w_x"])
+    br = jnp.einsum("bsd,dn->bsn", h, p["w_b"])
+    cr = jnp.einsum("bsd,dn->bsn", h, p["w_c"])
+    dtr = jnp.einsum("bsd,dh->bsh", h, p["w_dt"])
+    return z, xr, br, cr, dtr
+
+
+def _ssm_finish(cfg, p, y, z, x_dtype):
+    d_in = z.shape[-1]
+    B, S = z.shape[:2]
+    y = y.reshape(B, S, d_in)
+    gated = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    gated = rms_norm(gated, p["norm_y"], cfg.rms_eps)
+    out = jnp.einsum("bsi,id->bsd", gated, p["out_proj"])
+    return shard(out, ("batch", "seq", "embed")).astype(x_dtype)
+
+
+def apply_layer_seq(cfg: ModelConfig, spec: LayerSpec, p: Dict, x: jax.Array,
+                    positions: jax.Array, *, memory: Optional[jax.Array] = None,
+                    want_cache: bool = False,
+                    capacity: int = 0) -> Tuple[jax.Array, Optional[Dict]]:
+    """Train/prefill path. x: (B, S, d). Returns (x_out, cache|None)."""
+    cache: Dict[str, jax.Array] = {}
+    if spec.mixer == "attn":
+        window = 0 if spec.is_global else cfg.attn.sliding_window
+        out, (k, v) = _attn_seq(cfg, spec, p, x, positions, window)
+        x = x + out
+        if want_cache:
+            w = window_cache_size(cfg, spec, capacity)
+            if w:
+                # window cache: RING buffer — slot(p) = p % W (decode updates
+                # are a 1-token DUS instead of a GSPMD-hostile concat shift)
+                cache["k"], cache["v"] = (_ring_fit(k, w), _ring_fit(v, w))
+            else:
+                # full cache: left-aligned, decode appends at index cache_len
+                cache["k"], cache["v"] = (_left_fit(k, capacity),
+                                          _left_fit(v, capacity))
+    else:
+        h = rms_norm(x, p["ln1"], cfg.rms_eps)
+        z, xr, br, cr, dtr = _ssm_proj(cfg, p, h)
+        xc = jax.nn.silu(ssm_lib.causal_conv(xr, p["conv_x"]).astype(jnp.float32)).astype(xr.dtype)
+        bc = jax.nn.silu(ssm_lib.causal_conv(br, p["conv_b"]).astype(jnp.float32)).astype(br.dtype)
+        cc = jax.nn.silu(ssm_lib.causal_conv(cr, p["conv_c"]).astype(jnp.float32)).astype(cr.dtype)
+        res = ssm_lib.ssd_forward({"x": xc, "b": bc, "c": cc, "dt": dtr},
+                                  p, cfg.ssm, return_state=want_cache)
+        if want_cache:
+            y, h_state = res
+            W = cfg.ssm.conv_width
+            cache["conv_x"] = _right_fit(xr, W - 1)
+            cache["conv_b"] = _right_fit(br, W - 1)
+            cache["conv_c"] = _right_fit(cr, W - 1)
+            cache["h"] = h_state
+        else:
+            y = res
+        x = x + _ssm_finish(cfg, p, y, z, x.dtype)
+    if spec.has_cross:
+        assert memory is not None
+        out, (ck, cv) = _cross_seq(cfg, p, x, memory)
+        x = x + out
+        if want_cache:
+            cache["ck"], cache["cv"] = ck, cv
+    if spec.ffn == "dense":
+        h = rms_norm(x, p["ln2"], cfg.rms_eps)
+        x = x + swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    elif spec.ffn == "moe":
+        h = rms_norm(x, p["ln2"], cfg.rms_eps)
+        x = x + moe_ffn(h, p["moe"], cfg.moe)
+    return x, (cache if want_cache else None)
+
+
+def _right_fit(x: jax.Array, cap: int) -> jax.Array:
+    """Right-align the last ``cap`` steps of x (B, S, ...) into capacity cap."""
+    S = x.shape[1]
+    if S >= cap:
+        return x[:, S - cap:]
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (cap - S, 0)
+    return jnp.pad(x, pad)
+
+
+def _left_fit(x: jax.Array, cap: int) -> jax.Array:
+    """Left-align x (B, S, ...) into capacity cap (pad/truncate at the end)."""
+    S = x.shape[1]
+    if S >= cap:
+        return x[:, :cap]
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (0, cap - S)
+    return jnp.pad(x, pad)
+
+
+def _ring_fit(x: jax.Array, w: int) -> jax.Array:
+    """Scatter the last min(w, S) steps of x (B, S, ...) into ring slots
+    (absolute position p lands at slot p % w). Static indices."""
+    import numpy as np
+    S = x.shape[1]
+    keep = min(w, S)
+    ring = jnp.zeros((x.shape[0], w) + x.shape[2:], x.dtype)
+    slots = np.arange(S - keep, S) % w
+    return ring.at[:, slots].set(x[:, S - keep:])
+
+
+def apply_layer_decode(cfg: ModelConfig, spec: LayerSpec, p: Dict,
+                       x: jax.Array, cache: Dict, cache_len: jax.Array
+                       ) -> Tuple[jax.Array, Dict]:
+    """One-token path. x: (B, d). cache_len: #valid tokens before this step."""
+    new_cache = dict(cache)
+    B, d = x.shape
+    x = shard(x, ("batch", "embed"))   # co-shard residual d with weight fsdp
+    if spec.mixer == "attn":
+        h = rms_norm(x[:, None], p["ln1"], cfg.rms_eps)       # (B,1,d)
+        q, k, v = _qkv(h, p)
+        theta = _theta(cfg, spec)
+        pos = jnp.full((B, 1), cache_len, jnp.int32)
+        q = apply_rope(q, pos, theta)
+        k = apply_rope(k, pos, theta)
+        window = 0 if spec.is_global else cfg.attn.sliding_window
+        cap = cache["k"].shape[1]
+        if window and cap == window:  # ring-buffer window cache
+            slot = jnp.mod(jnp.asarray(cache_len, jnp.int32), cap)
+            k_cache = attn_lib.update_cache(cache["k"], k, slot)
+            v_cache = attn_lib.update_cache(cache["v"], v, slot)
+            vf, vt = 0, jnp.minimum(cache_len + 1, cap)
+        else:
+            k_cache = attn_lib.update_cache(cache["k"], k, cache_len)
+            v_cache = attn_lib.update_cache(cache["v"], v, cache_len)
+            vf, vt = 0, cache_len + 1
+        k_cache = shard(k_cache, ("batch", "kv_seq", "kv_heads", None))
+        v_cache = shard(v_cache, ("batch", "kv_seq", "kv_heads", None))
+        new_cache["k"], new_cache["v"] = k_cache, v_cache
+        out = attn_lib.decode_attention(q[:, 0], k_cache, v_cache, vf, vt)
+        out = jnp.einsum("bhk,hkd->bd", out, p["wo"])
+        x = shard(x + out, ("batch", "embed"))
+    else:
+        h = rms_norm(x[:, None], p["ln1"], cfg.rms_eps)
+        z, xr, br, cr, dtr = _ssm_proj(cfg, p, h)
+        z, xr, br, cr, dtr = (t[:, 0] for t in (z, xr, br, cr, dtr))
+        xc, new_cache["conv_x"] = ssm_lib.causal_conv_step(xr, cache["conv_x"], p["conv_x"])
+        bc, new_cache["conv_b"] = ssm_lib.causal_conv_step(br, cache["conv_b"], p["conv_b"])
+        cc, new_cache["conv_c"] = ssm_lib.causal_conv_step(cr, cache["conv_c"], p["conv_c"])
+        xc = jax.nn.silu(xc.astype(jnp.float32)).astype(xr.dtype)
+        bc = jax.nn.silu(bc.astype(jnp.float32)).astype(br.dtype)
+        cc = jax.nn.silu(cc.astype(jnp.float32)).astype(cr.dtype)
+        y, h_new = ssm_lib.ssd_decode_step(
+            {"x": xc, "b": bc, "c": cc, "dt": dtr}, p, cfg.ssm, cache["h"])
+        new_cache["h"] = h_new
+        out = _ssm_finish(cfg, p, y[:, None].reshape(B, 1, -1), z[:, None], x.dtype)
+        x = shard(x + out[:, 0], ("batch", "embed"))
+    if spec.has_cross:
+        h = rms_norm(x[:, None], p["ln_cross"], cfg.rms_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["cwq"])
+        src = cache["ck"].shape[1]
+        out = attn_lib.decode_attention(q[:, 0], cache["ck"], cache["cv"],
+                                        0, src)
+        out = jnp.einsum("bhk,hkd->bd", out, p["cwo"])
+        x = shard(x + out, ("batch", "embed"))
+    if spec.ffn == "dense":
+        h = rms_norm(x[:, None], p["ln2"], cfg.rms_eps)
+        h = shard(h, ("batch", None, "embed"))
+        x = shard(x + swiglu(h, p["w_gate"], p["w_up"], p["w_down"])[:, 0],
+                  ("batch", "embed"))
+    elif spec.ffn == "moe":
+        h = rms_norm(x[:, None], p["ln2"], cfg.rms_eps)
+        x = shard(x + moe_ffn(h, p["moe"], cfg.moe)[:, 0], ("batch", "embed"))
+    return x, new_cache

@@ -1,0 +1,310 @@
+"""Unified LM: program of layer segments, scan-over-layers, enc-dec, frontends.
+
+One class covers all 10 assigned architectures: the layer *program* is a list
+of (pattern, repeat) segments where each pattern position has an identical
+structure across repeats, so params stack and `lax.scan` keeps the HLO O(1)
+in depth (9 superblocks for jamba's 1:7 interleave, sextets for gemma3's
+5:1 local:global, plain stacks for uniform models).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import blocks
+from repro.models.blocks import LayerSpec, make_layer_spec
+from repro.models.common import (ArraySpec, ParamDef, init_params,
+                                 param_logical_axes, param_structs, rms_norm,
+                                 stack_defs, dtype_of)
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    pattern: Tuple[LayerSpec, ...]
+    repeat: int
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)
+
+
+def build_program(cfg: ModelConfig, *, decoder: bool = True,
+                  num_layers: Optional[int] = None) -> List[Segment]:
+    n = num_layers if num_layers is not None else (
+        cfg.num_layers if decoder else cfg.num_encoder_layers)
+    period = 1
+    if decoder:
+        if cfg.ssm is not None and cfg.attn.attn_period > 1:
+            period = _lcm(period, cfg.attn.attn_period)
+        if cfg.moe is not None:
+            period = _lcm(period, cfg.moe.period)
+        if cfg.attn.global_period:
+            period = _lcm(period, cfg.attn.global_period)
+    period = min(period, n)
+    specs = [make_layer_spec(cfg, i, decoder=decoder) for i in range(n)]
+    segments = []
+    full = n // period
+    if full:
+        segments.append(Segment(tuple(specs[:period]), full))
+    rem = n % period
+    if rem:
+        # by periodicity, layers [full*period:] match spec positions [0:rem]
+        segments.append(Segment(tuple(specs[full * period:]), 1))
+    return segments
+
+
+class LM:
+    """Functional model wrapper (decoder-only or enc-dec; optional frontend).
+
+    ``scan_unroll=True`` unrolls the layer scans (used by the dry-run's
+    shallow cost-extrapolation variants so cost_analysis counts every layer).
+    """
+
+    def __init__(self, cfg: ModelConfig, *, scan_unroll: bool = False,
+                 remat_group: int = 1):
+        self.cfg = cfg
+        self.scan_unroll = scan_unroll
+        # remat_group=g: checkpoint every g-th layer-group boundary instead of
+        # every layer — divides saved scan carries by g at no extra recompute
+        # (§Perf: what lets llama3-405b train_4k fit with microbatches=4).
+        self.remat_group = remat_group
+        self.program = build_program(cfg, decoder=True)
+        self.enc_program = (build_program(cfg, decoder=False)
+                            if cfg.num_encoder_layers else [])
+
+    # -- params --------------------------------------------------------------
+
+    def param_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        defs: Dict[str, Any] = {
+            "embed": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "fsdp")),
+            "final_norm": ParamDef((cfg.d_model,), (None,), "zeros"),
+        }
+        if not cfg.tie_embeddings:
+            defs["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_size),
+                                       ("fsdp", "vocab"))
+        if cfg.frontend.kind != "none":
+            defs["frontend_proj"] = ParamDef(
+                (cfg.frontend.embed_dim, cfg.d_model), (None, "fsdp"))
+        defs["segments"] = self._segment_defs(self.program)
+        if self.enc_program:
+            defs["encoder"] = self._segment_defs(self.enc_program)
+            defs["enc_norm"] = ParamDef((cfg.d_model,), (None,), "zeros")
+        return defs
+
+    def _segment_defs(self, program: Sequence[Segment]):
+        out = []
+        for seg in program:
+            pos_defs = tuple(blocks.layer_param_defs(self.cfg, sp)
+                             for sp in seg.pattern)
+            if seg.repeat > 1:
+                pos_defs = tuple(stack_defs(d, seg.repeat) for d in pos_defs)
+            out.append(pos_defs)
+        return out
+
+    def init(self, rng: jax.Array):
+        return init_params(self.param_defs(), rng, dtype_of(self.cfg.dtype))
+
+    def param_structs(self):
+        return param_structs(self.param_defs(), dtype_of(self.cfg.dtype))
+
+    def param_axes(self):
+        return param_logical_axes(self.param_defs())
+
+    # -- embedding / head ------------------------------------------------------
+
+    def _embed(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        return shard(x, ("batch", "seq", "embed"))
+
+    def _assemble_input(self, params, batch):
+        """Token + (optional) frontend embeds -> (B, S, d)."""
+        cfg = self.cfg
+        x = self._embed(params, batch["tokens"])
+        if cfg.frontend.kind != "none" and cfg.num_encoder_layers == 0:
+            emb = batch["embeds"].astype(x.dtype)  # (B, F, e_dim)
+            proj = jnp.einsum("bfe,ed->bfd", emb, params["frontend_proj"])
+            x = jnp.concatenate([proj.astype(x.dtype), x], axis=1)
+        return x
+
+    def _logits(self, params, h):
+        h = rms_norm(h, params["final_norm"], self.cfg.rms_eps)
+        if self.cfg.tie_embeddings:
+            logits = jnp.einsum("...d,vd->...v", h, params["embed"])
+        else:
+            logits = jnp.einsum("...d,dv->...v", h, params["lm_head"])
+        return shard(logits, ("batch", "seq", "vocab")
+                     if logits.ndim == 3 else ("batch", "vocab"))
+
+    # -- encoder ----------------------------------------------------------------
+
+    def _encode(self, params, src_embeds):
+        cfg = self.cfg
+        proj = jnp.einsum("bfe,ed->bfd", src_embeds.astype(jnp.float32),
+                          params["frontend_proj"].astype(jnp.float32))
+        x = proj.astype(dtype_of(cfg.dtype))
+        x = shard(x, ("batch", "seq", None))
+        S = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), x.shape[:2])
+        x = self._run_segments(self.enc_program, params["encoder"], x,
+                               positions, mode="train")[0]
+        return rms_norm(x, params["enc_norm"], cfg.rms_eps)
+
+    # -- segment runners ----------------------------------------------------------
+
+    def _run_segments(self, program, seg_params, x, positions, *, mode,
+                      memory=None, caches=None, cache_len=None, capacity=0,
+                      remat=False):
+        """mode: 'train' | 'prefill' | 'decode'."""
+        new_caches = []
+        for si, seg in enumerate(program):
+            p_seg = seg_params[si]
+            c_seg = caches[si] if caches is not None else None
+            if mode == "decode":
+                x, nc = self._seg_decode(seg, p_seg, x, c_seg, cache_len, memory)
+            else:
+                want = mode == "prefill"
+                x, nc = self._seg_seq(seg, p_seg, x, positions, memory,
+                                      want_cache=want, capacity=capacity,
+                                      remat=remat)
+            new_caches.append(nc)
+        return x, new_caches
+
+    def _seg_seq(self, seg: Segment, p_seg, x, positions, memory, *,
+                 want_cache, capacity, remat):
+        cfg = self.cfg
+
+        def one_rep(x, p_rep):
+            caches = []
+            for pi, sp in enumerate(seg.pattern):
+                x, c = blocks.apply_layer_seq(cfg, sp, p_rep[pi], x, positions,
+                                              memory=memory,
+                                              want_cache=want_cache,
+                                              capacity=capacity)
+                caches.append(c)
+            return x, (tuple(caches) if want_cache else None)
+
+        if seg.repeat == 1:
+            fn = jax.checkpoint(one_rep) if remat else one_rep
+            return fn(x, p_seg)
+
+        g = self.remat_group
+        if (remat and not want_cache and g > 1 and seg.repeat % g == 0
+                and not self.scan_unroll):
+            # grouped remat: outer scan over R/g checkpointed groups, inner
+            # scan over g layers saves nothing inside the group
+            p_grp = jax.tree.map(
+                lambda a: a.reshape(seg.repeat // g, g, *a.shape[1:]), p_seg)
+
+            def group_body(x, p_g):
+                def inner(x, p_rep):
+                    return one_rep(x, p_rep)[0], None
+                x, _ = jax.lax.scan(inner, x, p_g)
+                return x, None
+
+            x, _ = jax.lax.scan(jax.checkpoint(group_body), x, p_grp)
+            return x, None
+
+        def body(x, p_rep):
+            x, c = one_rep(x, p_rep)
+            return x, c
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, stacked = jax.lax.scan(body, x, p_seg,
+                                  unroll=seg.repeat if self.scan_unroll else 1)
+        return x, stacked
+
+    def _seg_decode(self, seg: Segment, p_seg, x, c_seg, cache_len, memory):
+        cfg = self.cfg
+
+        def one_rep(x, p_rep, c_rep):
+            new_c = []
+            for pi, sp in enumerate(seg.pattern):
+                x, nc = blocks.apply_layer_decode(cfg, sp, p_rep[pi], x,
+                                                  c_rep[pi], cache_len)
+                new_c.append(nc)
+            return x, tuple(new_c)
+
+        if seg.repeat == 1:
+            return one_rep(x, p_seg, c_seg)
+
+        def body(x, pc):
+            p_rep, c_rep = pc
+            return one_rep(x, p_rep, c_rep)
+
+        x, new_c = jax.lax.scan(body, x, (p_seg, c_seg),
+                                unroll=seg.repeat if self.scan_unroll else 1)
+        return x, new_c
+
+    # -- public step functions ------------------------------------------------
+
+    def train_loss(self, params, batch, *, remat: bool = True):
+        """batch: tokens (B,S), labels (B,S), mask (B,S) [+ embeds/src_embeds]."""
+        cfg = self.cfg
+        memory = None
+        if self.enc_program:
+            memory = self._encode(params, batch["src_embeds"])
+        x = self._assemble_input(params, batch)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h, _ = self._run_segments(self.program, params["segments"], x,
+                                  positions, mode="train", memory=memory,
+                                  remat=remat)
+        # for frontend models, logits/labels cover only the token region
+        if cfg.frontend.kind != "none" and cfg.num_encoder_layers == 0:
+            h = h[:, -batch["tokens"].shape[1]:]
+        logits = self._logits(params, h).astype(jnp.float32)
+        labels = batch["labels"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        nll = logz - gold
+        mask = batch["mask"].astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+    def prefill(self, params, batch, capacity: int):
+        """Returns (last_logits (B,V), caches)."""
+        cfg = self.cfg
+        memory = None
+        if self.enc_program:
+            memory = self._encode(params, batch["src_embeds"])
+        x = self._assemble_input(params, batch)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h, caches = self._run_segments(self.program, params["segments"], x,
+                                       positions, mode="prefill",
+                                       memory=memory, capacity=capacity)
+        logits = self._logits(params, h[:, -1])
+        return logits, caches
+
+    def decode_step(self, params, caches, batch):
+        """batch: token (B,), cache_len scalar. Returns (logits, caches)."""
+        x = self._embed(params, batch["token"][:, None])[:, 0]
+        h, new_caches = self._run_segments(
+            self.program, params["segments"], x, None, mode="decode",
+            caches=caches, cache_len=batch["cache_len"])
+        logits = self._logits(params, h)
+        return logits, new_caches
+
+    # -- cache specs -------------------------------------------------------------
+
+    def cache_specs(self, batch: int, capacity: int, src_len: int = 0):
+        out = []
+        for seg in self.program:
+            pos = tuple(blocks.layer_cache_specs(self.cfg, sp, batch, capacity,
+                                                 src_len, self.cfg.dtype)
+                        for sp in seg.pattern)
+            if seg.repeat > 1:
+                pos = tuple(
+                    {k: ArraySpec((seg.repeat,) + s.shape, s.dtype,
+                                  (None,) + s.logical_axes)
+                     for k, s in d.items()} for d in pos)
+            out.append(pos)
+        return out

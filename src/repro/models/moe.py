@@ -1,0 +1,127 @@
+"""Mixture-of-Experts FFN with expert parallelism over the "model" mesh axis.
+
+Design (DESIGN.md §4): activations are replicated over "model" inside a data
+shard (standard TP), experts are sharded over "model". Each model shard
+gathers only tokens routed to its local experts (dispatch is collective-free),
+runs the expert FFNs, and the weighted combine is a single psum over "model" —
+the same all-reduce a dense TP MLP needs. Token→expert assignment uses
+capacity-based static-shape dispatch (tokens beyond capacity are dropped,
+standard Switch-style).
+
+Runs inside ``shard_map``; on a 1×1 mesh the psum degenerates to identity so
+the identical code path serves CPU tests.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.distributed.sharding import (batch_axes, current_mesh,
+                                        current_rules)
+
+
+def _moe_local(xf: jax.Array, router_w: jax.Array, w_gate: jax.Array,
+               w_up: jax.Array, w_down: jax.Array, mcfg: MoEConfig,
+               e_start, axis_name: Optional[str], ep_size: int) -> jax.Array:
+    """Body run per model-shard. xf: (T, d); w_*: (E_local, d_or_f, f_or_d)."""
+    T, d = xf.shape
+    e_local = w_gate.shape[0]
+    k = mcfg.top_k
+    logits = jnp.einsum("td,de->te", xf, router_w,
+                        preferred_element_type=jnp.float32)   # (T, E_global)
+    top_vals, top_idx = jax.lax.top_k(logits, k)              # (T, k)
+    weights = jax.nn.softmax(top_vals, axis=-1)               # renormalized
+
+    cap = max(int(math.ceil(T * k / (e_local * ep_size) * mcfg.capacity_factor)), 1)
+
+    flat_idx = top_idx.reshape(-1)                            # (T*k,)
+    local_e = flat_idx - e_start                              # (T*k,)
+    is_local = (local_e >= 0) & (local_e < e_local)
+    safe_e = jnp.where(is_local, local_e, e_local)            # OOB => dropped
+    onehot = jax.nn.one_hot(safe_e, e_local, dtype=jnp.int32)  # (T*k, E_local)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                 # pos within expert
+    pos = (pos * onehot).sum(-1)                              # (T*k,)
+    keep = is_local & (pos < cap)
+    safe_e = jnp.where(keep, safe_e, e_local)
+
+    # dispatch: scatter tokens into (E_local, cap, d); OOB rows are dropped
+    tok_of = jnp.arange(T * k) // k
+    x_e = jnp.zeros((e_local + 1, cap, d), xf.dtype)
+    x_e = x_e.at[safe_e, jnp.minimum(pos, cap - 1)].set(
+        xf[tok_of], mode="drop")
+    x_e = x_e[:e_local]
+
+    # expert FFN (swiglu)
+    g = jnp.einsum("ecd,edf->ecf", x_e, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", x_e, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xf.dtype) * u
+    y_e = jnp.einsum("ecf,efd->ecd", h, w_down)               # (E_local, cap, d)
+
+    # combine: gather back per (token, k), weight, sum over k
+    gath_e = jnp.minimum(safe_e, e_local - 1)
+    y_tk = y_e[gath_e, jnp.minimum(pos, cap - 1)]             # (T*k, d)
+    y_tk = jnp.where(keep[:, None], y_tk, 0)
+    y_tk = y_tk.astype(jnp.float32) * weights.reshape(-1)[:, None]
+    out = y_tk.reshape(T, k, d).sum(axis=1)
+    if axis_name is not None:
+        out = jax.lax.psum(out, axis_name)
+    return out.astype(xf.dtype)
+
+
+def moe_ffn(x: jax.Array, params: dict, mcfg: MoEConfig) -> jax.Array:
+    """x: (B, S, d). params: router (d,E), gate/up (E,d,f), down (E,f,d)."""
+    mesh = current_mesh()
+    B, S, d = x.shape
+
+    if mesh is None or "model" not in mesh.shape:
+        xf = x.reshape(B * S, d)
+        out = _moe_local(xf, params["router"], params["w_gate"],
+                         params["w_up"], params["w_down"], mcfg,
+                         e_start=0, axis_name=None, ep_size=1)
+        return out.reshape(B, S, d)
+
+    ep = mesh.shape["model"]
+    num_e = params["w_gate"].shape[0]
+    if num_e % ep != 0:
+        ep = math.gcd(num_e, ep)  # partial EP when experts don't divide
+    b_axes = batch_axes(mesh)
+    # drop batch axes that don't divide the (possibly microbatched) batch
+    if b_axes is not None:
+        axes = (b_axes,) if isinstance(b_axes, str) else tuple(b_axes)
+        while axes:
+            sz = math.prod(mesh.shape[a] for a in axes)
+            if B % sz == 0:
+                break
+            axes = axes[1:]
+        b_axes = axes if axes else None
+        if isinstance(b_axes, tuple) and len(b_axes) == 1:
+            b_axes = b_axes[0]
+    xspec = P(b_axes, None, None)
+    espec = P("model", None, None) if ep == mesh.shape["model"] else P(None, None, None)
+
+    def body(xb, router_w, w_gate, w_up, w_down):
+        e_local = w_gate.shape[0]
+        e_start = jax.lax.axis_index("model") * e_local if e_local != num_e else 0
+        bb, ss, dd = xb.shape
+        out = _moe_local(xb.reshape(bb * ss, dd), router_w, w_gate, w_up,
+                         w_down, mcfg, e_start=e_start,
+                         axis_name="model" if e_local != num_e else None,
+                         ep_size=ep)
+        if e_local == num_e:
+            # experts replicated (no EP): every shard computed the full thing
+            pass
+        return out.reshape(bb, ss, dd)
+
+    out = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(xspec, P(None, None), espec, espec,
+                  P("model", None, None) if ep == mesh.shape["model"] else P(None, None, None)),
+        out_specs=xspec)(x, params["router"], params["w_gate"],
+                         params["w_up"], params["w_down"])
+    return out

@@ -1,0 +1,150 @@
+"""Mamba-2 SSD (state-space duality) block — chunked matmul formulation.
+
+TPU adaptation note (DESIGN.md §2): all SSM layers (including Jamba's, which
+are Mamba-1 in the original) use the SSD dual form because it is matmul-heavy
+and maps onto the MXU; the recurrent Mamba-1 scan form is VPU-bound on TPU.
+
+The sequence is processed in chunks of ``chunk_size`` with a `lax.scan` over
+chunks (carrying the (B,H,P,N) state), so the quadratic intra-chunk tensors
+stay O(B·Q²·H) per step instead of O(B·S·Q·H) materialized.
+
+Shapes: x (B, S, d_model); d_inner = expand*d; H = d_inner/P heads of dim P;
+state size N; single B/C group (ngroups=1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.distributed.sharding import shard
+
+
+class SSMCache(NamedTuple):
+    conv_x: jax.Array   # (B, W-1, d_inner) raw pre-conv inputs
+    conv_b: jax.Array   # (B, W-1, N)
+    conv_c: jax.Array   # (B, W-1, N)
+    h: jax.Array        # (B, H, P, N) SSD state
+
+
+def causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C), w: (W, C) -> (B, S, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    S = x.shape[1]
+    for i in range(W):
+        out = out + xp[:, i:i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def causal_conv_step(x_new: jax.Array, conv_state: jax.Array,
+                     w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One-step conv. x_new: (B, C); conv_state: (B, W-1, C)."""
+    full = jnp.concatenate([conv_state, x_new[:, None]], axis=1)  # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", full.astype(jnp.float32),
+                     w.astype(jnp.float32)).astype(x_new.dtype)
+    return out, full[:, 1:].astype(conv_state.dtype)
+
+
+def _split_heads(x: jax.Array, head_dim: int) -> jax.Array:
+    B, S, DI = x.shape
+    return x.reshape(B, S, DI // head_dim, head_dim)
+
+
+def ssd_forward(xz: dict, params: dict, cfg: SSMConfig,
+                init_state=None, return_state: bool = False):
+    """Chunked SSD over a full sequence.
+
+    xz: {"x": (B,S,d_inner) post-conv post-act, "b": (B,S,N), "c": (B,S,N),
+         "dt": (B,S,H) pre-softplus}.
+    params: {"A_log": (H,), "D": (H,), "dt_bias": (H,)}.
+    Returns y (B, S, H, P) [+ final state (B,H,P,N)].
+    """
+    x = _split_heads(xz["x"], cfg.head_dim)              # (B,S,H,P)
+    bmat, cmat = xz["b"], xz["c"]                        # (B,S,N)
+    B_, S, H, P = x.shape
+    N = bmat.shape[-1]
+    Q = min(cfg.chunk_size, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    dt = jax.nn.softplus(xz["dt"].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    if pad:
+        # dt=0 on padded steps => decay exp(dt*A)=1 and xbar=0: pure no-ops,
+        # so the carried state stays exact for partial trailing chunks.
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // Q
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))     # (H,)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    # (nc, B, Q, ...) for scan
+    xc = x.reshape(B_, nc, Q, H, P).transpose(1, 0, 2, 3, 4)
+    bc = bmat.reshape(B_, nc, Q, N).transpose(1, 0, 2, 3)
+    cc = cmat.reshape(B_, nc, Q, N).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(B_, nc, Q, H).transpose(1, 0, 2, 3)
+
+    h0 = (jnp.zeros((B_, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def chunk_body(h_prev, inp):
+        xq, bq, cq, dtq = inp                              # (B,Q,...)
+        xbar = xq.astype(jnp.float32) * dtq[..., None]     # (B,Q,H,P)
+        l = dtq * A[None, None, :]                         # (B,Q,H), <= 0
+        L = jnp.cumsum(l, axis=1)                          # inclusive
+        L_last = L[:, -1, :]                               # (B,H)
+        # intra-chunk
+        cb = jnp.einsum("bqn,bsn->bqs", cq, bq,
+                        preferred_element_type=jnp.float32)
+        decay = jnp.exp(L[:, :, None, :] - L[:, None, :, :])   # (B,Q,S,H)
+        decay = jnp.where(tri[None, :, :, None], decay, 0.0)
+        y_diag = jnp.einsum("bqs,bqsh,bshp->bqhp", cb, decay, xbar,
+                            preferred_element_type=jnp.float32)
+        # inter-chunk: contribution of carried state
+        y_off = jnp.einsum("bqh,bqn,bhpn->bqhp", jnp.exp(L), cq, h_prev,
+                           preferred_element_type=jnp.float32)
+        # chunk state summary
+        w_state = jnp.exp(L_last[:, None, :] - L)          # (B,Q,H)
+        s_n = jnp.einsum("bqh,bqn,bqhp->bhpn", w_state, bq, xbar,
+                         preferred_element_type=jnp.float32)
+        h_next = h_prev * jnp.exp(L_last)[:, :, None, None] + s_n
+        return h_next, (y_diag + y_off)
+
+    h_final, yc = jax.lax.scan(chunk_body, h0, (xc, bc, cc, dtc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B_, nc * Q, H, P)[:, :S]
+    y = y + (x[:, :S].astype(jnp.float32)
+             * params["D"].astype(jnp.float32)[None, None, :, None])
+    y = y.astype(xz["x"].dtype)
+    if return_state:
+        return y, h_final.astype(xz["x"].dtype)
+    return y
+
+
+def ssd_decode_step(xz: dict, params: dict, cfg: SSMConfig,
+                    h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token SSD update.
+
+    xz: {"x": (B, d_inner), "b": (B,N), "c": (B,N), "dt": (B,H)}.
+    h: (B,H,P,N). Returns (y (B,H,P), h_new).
+    """
+    B_, DI = xz["x"].shape
+    P = cfg.head_dim
+    H = DI // P
+    x = xz["x"].reshape(B_, H, P)
+    dt = jax.nn.softplus(xz["dt"].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))   # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A[None, :])                                     # (B,H)
+    xbar = x.astype(jnp.float32) * dt[..., None]                     # (B,H,P)
+    hf = h.astype(jnp.float32)
+    h_new = (hf * a[:, :, None, None]
+             + jnp.einsum("bhp,bn->bhpn", xbar, xz["b"].astype(jnp.float32)))
+    h_new = shard(h_new, ("batch", "ssm_heads", None, None))
+    y = jnp.einsum("bn,bhpn->bhp", xz["c"].astype(jnp.float32), h_new)
+    y = y + x.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, :, None]
+    return y.astype(x.dtype), h_new.astype(h.dtype)

@@ -1,0 +1,180 @@
+"""AdamW with optional 8-bit (blockwise-quantized) moments.
+
+Distributed-optimization notes (DESIGN.md §8):
+  - optimizer states inherit the parameter shardings (FSDP over "data"), so
+    m/v are ZeRO-sharded with no extra code;
+  - ``moments_dtype="int8"`` stores m/v as int8 with per-block fp32 scales
+    (8-bit-Adam style) — 4x memory cut on the dominant optimizer-state term,
+    which is what lets llama3-405b train_4k fit 256 v5e chips (§Perf);
+  - gradient accumulation dtype is configurable (fp32 default, bf16 halves
+    the accumulation-buffer bytes and the cross-pod reduce bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _block_of(last_dim: int) -> int:
+    """Largest power-of-two block <= BLOCK dividing the last dim exactly —
+    shape-preserving quantization (no reshape/pad), so the int8 moments
+    inherit the parameter shardings verbatim. (A flat reshape(-1) layout
+    forces GSPMD to gather the full tensor — §Perf B-iteration lesson.)"""
+    import math
+    g = math.gcd(last_dim, BLOCK)
+    return max(g, 1)
+
+
+def _blockwise_quant(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """fp32 (..., L) -> (int8 (..., L), fp32 scales (..., L/block))."""
+    L = x.shape[-1] if x.ndim else 1
+    if x.ndim == 0:
+        x = x[None]
+        L = 1
+    b = _block_of(L)
+    g = x.reshape(*x.shape[:-1], L // b, b)
+    scale = jnp.max(jnp.abs(g), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(g / scale[..., None]), -127, 127)
+    return q.reshape(x.shape).astype(jnp.int8), scale
+
+
+def _blockwise_dequant(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    L = q.shape[-1]
+    b = _block_of(L)
+    g = q.astype(jnp.float32).reshape(*q.shape[:-1], L // b, b)
+    out = (g * scale[..., None]).reshape(q.shape)
+    return out.reshape(shape)
+
+
+class Quantized(NamedTuple):
+    q: jax.Array
+    scale: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moments_dtype: str = "float32"   # "float32" | "bfloat16" | "int8"
+    warmup_steps: int = 100
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def _store(x: jax.Array, mode: str, sqrt_map: bool = False):
+    if mode == "int8":
+        # v spans many decades: quantize sqrt(v) (8-bit-Adam-style dynamic
+        # range compression) — x must be >= 0 when sqrt_map is set.
+        if sqrt_map:
+            x = jnp.sqrt(jnp.maximum(x, 0.0))
+        return Quantized(*_blockwise_quant(x))
+    if mode == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    return x
+
+
+def _load(x, shape, mode: str, sqrt_map: bool = False) -> jax.Array:
+    if mode == "int8":
+        out = _blockwise_dequant(x.q, x.scale, shape)
+        return jnp.square(out) if sqrt_map else out
+    return x.astype(jnp.float32)
+
+
+def init_state(params, cfg: AdamWConfig) -> AdamWState:
+    def zeros():
+        return jax.tree.map(
+            lambda p: _store(jnp.zeros(p.shape, jnp.float32),
+                             cfg.moments_dtype), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros(), v=zeros())
+
+
+def state_structs(param_structs, cfg: AdamWConfig):
+    """ShapeDtypeStructs matching init_state (for AOT lowering)."""
+    def one(p):
+        if cfg.moments_dtype == "int8":
+            shape = p.shape if p.shape else (1,)
+            L = shape[-1]
+            b = _block_of(L)
+            return Quantized(jax.ShapeDtypeStruct(shape, jnp.int8),
+                             jax.ShapeDtypeStruct(shape[:-1] + (L // b,),
+                                                  jnp.float32))
+        dt = jnp.bfloat16 if cfg.moments_dtype == "bfloat16" else jnp.float32
+        return jax.ShapeDtypeStruct(p.shape, dt)
+    m = jax.tree.map(one, param_structs)
+    v = jax.tree.map(one, param_structs)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), m=m, v=v)
+
+
+def state_logical_axes(param_axes, cfg: AdamWConfig):
+    """Logical-axes tree matching state_structs; shape-preserving int8
+    moments inherit the parameter axes (scales drop the last axis)."""
+    def one(ax_shape):
+        axes, shape = ax_shape
+        if cfg.moments_dtype == "int8":
+            shp = shape if shape else (1,)
+            ax = axes if shape else (None,)
+            L = shp[-1]
+            b = _block_of(L)
+            return Quantized((ax, shp),
+                             (ax[:-1] + (None,), shp[:-1] + (L // b,)))
+        return (axes, shape)
+    is_leaf = lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[1], tuple)
+    m = jax.tree.map(one, param_axes, is_leaf=is_leaf)
+    v = jax.tree.map(one, param_axes, is_leaf=is_leaf)
+    return AdamWState(step=((), ()), m=m, v=v)
+
+
+def _global_norm(grads) -> jax.Array:
+    leaves = jax.tree.leaves(grads)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def apply_update(params, grads, state: AdamWState, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip > 0 else 1.0
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    lr = cfg.lr * warm
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m_s, v_s):
+        g = g.astype(jnp.float32) * clip
+        m = _load(m_s, p.shape, cfg.moments_dtype)
+        v = _load(v_s, p.shape, cfg.moments_dtype, sqrt_map=True)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh, vh = m / b1c, v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return (new_p, _store(m, cfg.moments_dtype),
+                _store(v, cfg.moments_dtype, sqrt_map=True))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    is_q = lambda x: isinstance(x, Quantized)
+    flat_m = jax.tree.leaves(state.m, is_leaf=is_q)
+    flat_v = jax.tree.leaves(state.v, is_leaf=is_q)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_params, AdamWState(step, new_m, new_v), {"grad_norm": gnorm,
+                                                        "lr": lr}

@@ -1,0 +1,112 @@
+"""Executors: model-execution time for one engine iteration.
+
+SimExecutor — roofline cost model on a HardwareProfile (the SLO benchmarks
+run on CPU, so wall-time is simulated around the *real* scheduler/block-table
+code). RealExecutor — actually runs a (tiny) JAX model: used by integration
+tests to prove the engine is lossless under rotation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import HardwareProfile, ModelConfig
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    """One engine iteration's device work."""
+    decode_reqs: List[int] = dataclasses.field(default_factory=list)
+    decode_kv_tokens: int = 0            # total KV tokens read by decodes
+    prefill_tokens: int = 0              # chunked-prefill tokens this iter
+    prefill_attn_tokens: int = 0         # sum over prefill chunks of ctx len
+
+    @property
+    def empty(self) -> bool:
+        return not self.decode_reqs and self.prefill_tokens == 0
+
+
+class SimExecutor:
+    def __init__(self, cfg: ModelConfig, hw: HardwareProfile,
+                 fixed_overhead_s: float = 0.004):
+        self.cfg = cfg
+        self.hw = hw
+        self.fixed = fixed_overhead_s
+        self.n_active = cfg.active_param_count()
+        self.weight_bytes = cfg.param_count() * 2
+        self.kv_per_token = cfg.kv_bytes_per_token()
+
+    def step_time(self, plan: BatchPlan) -> float:
+        if plan.empty:
+            return self.fixed / 2
+        n_tok = len(plan.decode_reqs) + plan.prefill_tokens
+        flops = 2 * self.n_active * n_tok
+        # attention flops: decode reads KV; prefill quadratic on chunk ctx
+        hqd = max(self.cfg.num_heads * self.cfg.head_dim, 1)
+        flops += 4 * plan.decode_kv_tokens * hqd * self.cfg.num_attn_layers \
+            / max(self.cfg.num_layers, 1) * self.cfg.num_layers
+        flops += 2 * plan.prefill_attn_tokens * hqd * self.cfg.num_attn_layers
+        t_compute = flops / (self.hw.flops_bf16 * self.hw.mfu)
+        # memory: weights once per iteration + decode KV reads
+        t_mem = (self.weight_bytes
+                 + plan.decode_kv_tokens * self.kv_per_token) / self.hw.hbm_bw
+        return max(t_compute, t_mem) + self.fixed
+
+
+class RealExecutor:
+    """Drives an actual LM (reduced config) with a dense per-request KV view.
+
+    Used by tests/examples: token streams must be identical with and without
+    rotation (rotation moves KV between the device pool and a host-side numpy
+    store — semantically exercising the DuplexKV data path).
+    """
+
+    def __init__(self, cfg: ModelConfig, seed: int = 0):
+        import jax
+        from repro.models.lm import LM
+        self.cfg = cfg
+        self.lm = LM(cfg)
+        self.params = self.lm.init(jax.random.PRNGKey(seed))
+        self._caches: Dict[int, object] = {}     # req_id -> cache pytree (device)
+        self._host: Dict[int, object] = {}       # req_id -> cache pytree (numpy)
+        self._tokens: Dict[int, List[int]] = {}
+
+    def prefill(self, req_id: int, tokens: Sequence[int], capacity: int) -> int:
+        import jax.numpy as jnp
+        toks = jnp.asarray([list(tokens)], jnp.int32)
+        logits, cache = self.lm.prefill(self.params, {"tokens": toks}, capacity)
+        self._caches[req_id] = cache
+        nxt = int(logits[0].argmax())
+        self._tokens[req_id] = [nxt]
+        return nxt
+
+    def decode(self, req_id: int, token: int, cache_len: int) -> int:
+        import jax.numpy as jnp
+        logits, cache = self.lm.decode_step(
+            self.params, self._caches[req_id],
+            {"token": jnp.asarray([token], jnp.int32),
+             "cache_len": jnp.asarray(cache_len, jnp.int32)})
+        self._caches[req_id] = cache
+        nxt = int(logits[0].argmax())
+        self._tokens[req_id].append(nxt)
+        return nxt
+
+    # rotation = move cache off device (numpy) and back — the real data path
+    def swap_out(self, req_id: int) -> None:
+        import numpy as np
+        import jax
+        cache = self._caches.pop(req_id, None)
+        if cache is not None:   # mid-prefill requests have no cache yet
+            self._host[req_id] = jax.tree.map(lambda x: np.asarray(x), cache)
+
+    def swap_in(self, req_id: int) -> None:
+        import jax.numpy as jnp
+        import jax
+        host = self._host.pop(req_id, None)
+        if host is not None:
+            self._caches[req_id] = jax.tree.map(jnp.asarray, host)
+
+    def drop(self, req_id: int) -> None:
+        self._caches.pop(req_id, None)
+        self._host.pop(req_id, None)
+        self._tokens.pop(req_id, None)

@@ -1,0 +1,59 @@
+"""SLO attainment and latency metrics (paper §5.1: attainment rate = % of
+requests meeting the TTFT / TBT thresholds)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.types import Request
+
+
+def percentile(vals: Sequence[float], p: float) -> float:
+    if not len(vals):
+        return 0.0
+    return float(np.percentile(np.asarray(vals), p))
+
+
+@dataclasses.dataclass
+class SLOReport:
+    n: int
+    ttft_attainment: float
+    tbt_attainment: float
+    p50_ttft: float
+    p99_ttft: float
+    p50_tbt: float
+    p99_tbt: float
+    mean_tbt: float
+    throughput_tok_s: float
+    total_time_s: float
+    rotations: int
+
+    def row(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def evaluate(requests: Sequence[Request], *, total_time: float) -> SLOReport:
+    done = [r for r in requests if r.t_first_token is not None]
+    ttft_ok = [r for r in done if r.ttft_ok()]
+    # TBT attainment: a request attains its TBT SLO if its max TBT is within
+    # the threshold (per-request accounting, like the paper)
+    tbt_ok = [r for r in done if r.tbt_ok()]
+    ttfts = [r.ttft() for r in done]
+    tbts = [v for r in done for v in r.tbt_values()]
+    toks = sum(r.tokens_generated for r in requests)
+    n = len(requests)
+    return SLOReport(
+        n=n,
+        ttft_attainment=len(ttft_ok) / n if n else 0.0,
+        tbt_attainment=len(tbt_ok) / n if n else 0.0,
+        p50_ttft=percentile(ttfts, 50),
+        p99_ttft=percentile(ttfts, 99),
+        p50_tbt=percentile(tbts, 50),
+        p99_tbt=percentile(tbts, 99),
+        mean_tbt=float(np.mean(tbts)) if tbts else 0.0,
+        throughput_tok_s=toks / total_time if total_time else 0.0,
+        total_time_s=total_time,
+        rotations=sum(r.rotations for r in requests),
+    )

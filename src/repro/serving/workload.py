@@ -1,0 +1,54 @@
+"""Workload generation: Poisson arrivals + dataset-like length distributions.
+
+ShareGPT / LMSYS-Chat-1M length statistics are modeled as clipped lognormals
+fit to the published distributions (no network access in this environment);
+all draws are seeded and deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.configs.base import SLOConfig
+from repro.core.types import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetProfile:
+    name: str
+    in_mu: float        # lognormal mu of prompt length
+    in_sigma: float
+    out_mu: float
+    out_sigma: float
+    max_in: int = 4096
+    max_out: int = 1024
+
+
+# means: ShareGPT ~220 in / ~200 out; LMSYS ~100 in / ~160 out
+SHAREGPT = DatasetProfile("sharegpt", in_mu=5.0, in_sigma=0.9,
+                          out_mu=5.0, out_sigma=0.8,
+                          max_in=4096, max_out=2048)
+LMSYS = DatasetProfile("lmsys", in_mu=4.2, in_sigma=1.1,
+                       out_mu=4.8, out_sigma=0.8,
+                       max_in=2048, max_out=1024)
+
+DATASETS = {d.name: d for d in (SHAREGPT, LMSYS)}
+
+
+def generate_requests(dataset: str, rps: float, duration_s: float,
+                      seed: int = 0, slo: SLOConfig = SLOConfig()) -> List[Request]:
+    prof = DATASETS[dataset]
+    rng = np.random.default_rng(seed)
+    n = max(int(rps * duration_s), 1)
+    gaps = rng.exponential(1.0 / rps, size=n)
+    arrivals = np.cumsum(gaps)
+    in_lens = np.clip(rng.lognormal(prof.in_mu, prof.in_sigma, n), 8,
+                      prof.max_in).astype(int)
+    out_lens = np.clip(rng.lognormal(prof.out_mu, prof.out_sigma, n), 4,
+                       prof.max_out).astype(int)
+    return [Request(req_id=i, arrival_time=float(arrivals[i]),
+                    prompt_len=int(in_lens[i]), output_len=int(out_lens[i]),
+                    slo=slo)
+            for i in range(n)]

@@ -1,0 +1,95 @@
+"""Train step builder: microbatched grad accumulation + AdamW update."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import LM
+from repro.optimizer import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+
+
+def make_train_step(lm: LM, opt_cfg: adamw.AdamWConfig, *,
+                    microbatches: int = 1, remat: bool = True,
+                    accum_dtype: str = "float32", unroll: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatches`` splits the per-device batch for grad accumulation
+    (sequential lax.scan); ``accum_dtype="bfloat16"`` halves accumulation
+    buffer bytes (gradient-compression knob, DESIGN.md §8). ``unroll``
+    unrolls the accumulation scan (dry-run cost extrapolation).
+    """
+    acc_dt = jnp.bfloat16 if accum_dtype == "bfloat16" else jnp.float32
+    # gradient buffers inherit the parameter shardings (so DP gradient
+    # reduction lowers to reduce-scatter into the FSDP shards, not a full
+    # all-reduce into replicated buffers — §Perf H2)
+    grad_axes = lm.param_axes()
+    _ax_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
+                          and isinstance(x[1], tuple))
+
+    def shard_like_params(grads):
+        from repro.distributed.sharding import shard as _shard
+        leaves, tdef = jax.tree.flatten(grads)
+        axes = jax.tree.leaves(grad_axes, is_leaf=_ax_leaf)
+        return jax.tree.unflatten(
+            tdef, [_shard(g, ax[0]) for g, ax in zip(leaves, axes)])
+
+    def loss_fn(params, mb):
+        return lm.train_loss(params, mb, remat=remat)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        params = state.params
+
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = shard_like_params(grads)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def accum(carry, mb):
+                loss_acc, g_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(acc_dt), g_acc,
+                    shard_like_params(grads))
+                return (loss_acc + loss, shard_like_params(g_acc)), None
+
+            g0 = shard_like_params(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params))
+            (loss_sum, grads), _ = jax.lax.scan(
+                accum, (jnp.zeros((), jnp.float32), g0), mbs,
+                unroll=microbatches if unroll else 1)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        new_params, new_opt, metrics = adamw.apply_update(
+            params, grads, state.opt, opt_cfg)
+        metrics["loss"] = loss
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def init_train_state(lm: LM, rng: jax.Array, opt_cfg: adamw.AdamWConfig) -> TrainState:
+    params = lm.init(rng)
+    return TrainState(params, adamw.init_state(params, opt_cfg))
+
+
+def train_state_structs(lm: LM, opt_cfg: adamw.AdamWConfig) -> TrainState:
+    ps = lm.param_structs()
+    return TrainState(ps, adamw.state_structs(ps, opt_cfg))
+
+
+def train_state_logical_axes(lm: LM, opt_cfg: adamw.AdamWConfig) -> TrainState:
+    ax = lm.param_axes()
+    return TrainState(ax, adamw.state_logical_axes(ax, opt_cfg))

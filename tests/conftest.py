@@ -1,0 +1,7 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches see 1 device;
+# only launch/dryrun.py forces 512 host devices (in its own process).
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))

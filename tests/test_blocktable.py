@@ -1,0 +1,99 @@
+"""Two-tier block table: eager rotation life-cycle + invariants under fuzz."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.blocktable import BlockLoc, OutOfBlocks, TwoTierBlockTable
+
+
+def make_table(hbm=32, dram=64):
+    return TwoTierBlockTable(hbm, dram, block_bytes=4 << 20,
+                             segments_per_block=64)
+
+
+def test_eager_rotation_makes_preemption_free():
+    t = make_table()
+    t.alloc_hbm(1, 4)
+    t.mark_synced(1, 3)                      # 3 full blocks, 1 dirty
+    descs = t.eager_candidates(limit=10)
+    assert len(descs) == 3
+    for d in descs:
+        t.complete_d2h(d.block_id)
+    # preempt: only the dirty tail block needs a transfer
+    p = t.preempt(1)
+    assert len(p) == 1
+    assert t.preempt_free_blocks == 3
+    t.complete_swap_out(1)
+    assert t.hbm_free == 32
+    assert all(b.loc == BlockLoc.DRAM for b in t.blocks_of(1))
+
+
+def test_swap_in_retains_dram_copy():
+    t = make_table()
+    t.alloc_hbm(1, 2)
+    t.mark_synced(1, 2)
+    for d in t.eager_candidates(10):
+        t.complete_d2h(d.block_id)
+    t.preempt(1)
+    t.complete_swap_out(1)
+    descs = t.swap_in(1)
+    assert len(descs) == 2
+    t.complete_swap_in(1)
+    assert all(b.loc == BlockLoc.BOTH for b in t.blocks_of(1))
+    # re-preemption is free again (incremental host backup property)
+    p2 = t.preempt(1)
+    assert p2 == []
+    t.check_invariants()
+
+
+def test_out_of_blocks():
+    t = make_table(hbm=2)
+    t.alloc_hbm(1, 2)
+    with pytest.raises(OutOfBlocks):
+        t.alloc_hbm(2, 1)
+
+
+def test_finish_frees_everything():
+    t = make_table()
+    t.alloc_hbm(1, 5)
+    t.mark_synced(1, 5)
+    for d in t.eager_candidates(10):
+        t.complete_d2h(d.block_id)
+    t.free_request(1)
+    assert t.hbm_free == 32 and t.dram_free == 64
+
+
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "sync", "eager",
+                                           "preempt", "swapin", "finish"]),
+                          st.integers(0, 4), st.integers(1, 6)),
+                min_size=1, max_size=60))
+@settings(max_examples=120, deadline=None)
+def test_invariants_under_random_ops(ops):
+    t = make_table(hbm=24, dram=48)
+    swapped_out = set()
+    live = set()
+    for op, rid, n in ops:
+        try:
+            if op == "alloc" and rid not in swapped_out:
+                t.alloc_hbm(rid, n)
+                live.add(rid)
+            elif op == "sync" and rid in live:
+                t.mark_synced(rid, n)
+            elif op == "eager":
+                for d in t.eager_candidates(n):
+                    t.complete_d2h(d.block_id)
+            elif op == "preempt" and rid in live and rid not in swapped_out:
+                t.preempt(rid)
+                t.complete_swap_out(rid)
+                swapped_out.add(rid)
+            elif op == "swapin" and rid in swapped_out:
+                t.swap_in(rid)
+                t.complete_swap_in(rid)
+                swapped_out.discard(rid)
+            elif op == "finish" and rid in live:
+                t.free_request(rid)
+                live.discard(rid)
+                swapped_out.discard(rid)
+        except OutOfBlocks:
+            pass
+        t.check_invariants()

@@ -1,0 +1,77 @@
+"""Sharding rules: pspec construction, divisibility fallback, axis dedup."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import (DECODE_RULES, PREFILL_RULES,
+                                        TRAIN_RULES, ShardingRules,
+                                        batch_axes, pspec_for, rules_for_shape,
+                                        shard, sharding_ctx,
+                                        single_device_mesh)
+
+
+def fake_mesh(shape=(4, 2), axes=("data", "model")):
+    devs = np.array(jax.devices() * (np.prod(shape) // len(jax.devices()) + 1))
+    return Mesh(devs[:np.prod(shape)].reshape(shape), axes)
+
+
+def test_pspec_basic():
+    mesh = fake_mesh()
+    spec = pspec_for(("batch", "seq", None), mesh, TRAIN_RULES, (8, 16, 32))
+    assert spec == P("data")
+
+
+def test_pspec_drops_non_divisible():
+    mesh = fake_mesh()
+    # heads=3 not divisible by model=2 => replicated
+    spec = pspec_for(("batch", None, "heads", None), mesh, TRAIN_RULES,
+                     (8, 16, 3, 64))
+    assert spec == P("data")
+    spec2 = pspec_for(("batch", None, "heads", None), mesh, TRAIN_RULES,
+                      (8, 16, 4, 64))
+    assert spec2 == P("data", None, "model")
+
+
+def test_pspec_axis_dedup():
+    """kv cache (batch, kv_seq, kv_heads): kv_seq takes 'model' first, so
+    kv_heads must be dropped (a mesh axis can appear only once)."""
+    mesh = fake_mesh()
+    spec = pspec_for(("batch", "kv_seq", "kv_heads", None), mesh,
+                     ShardingRules(kv_seq="model", kv_heads="model"),
+                     (8, 64, 2, 32))
+    assert spec == P("data", "model")
+
+
+def test_pod_axis_dropped_on_single_pod():
+    mesh = fake_mesh()
+    spec = pspec_for(("batch",), mesh, TRAIN_RULES, (8,))
+    assert spec == P("data")       # ("pod","data") filtered to ("data",)
+    mesh3 = fake_mesh((2, 2, 2), ("pod", "data", "model"))
+    spec3 = pspec_for(("batch",), mesh3, TRAIN_RULES, (8,))
+    assert spec3 == P(("pod", "data"))
+
+
+def test_decode_rules_replicate_batch():
+    rules = rules_for_shape("decode", 128)
+    assert rules.batch is None
+    assert rules.kv_seq == ("data", "model")
+    assert rules_for_shape("train").batch == ("pod", "data")
+
+
+def test_shard_noop_outside_ctx():
+    x = jax.numpy.ones((4, 4))
+    assert shard(x, ("batch", None)) is x
+
+
+def test_shard_applies_in_ctx():
+    mesh = single_device_mesh()
+    with sharding_ctx(mesh, TRAIN_RULES):
+        x = jax.numpy.ones((4, 4))
+        y = shard(x, ("batch", None))
+        assert y.shape == x.shape
+
+
+def test_batch_axes():
+    mesh = fake_mesh()
+    assert batch_axes(mesh, TRAIN_RULES) == "data"

@@ -1,0 +1,55 @@
+"""End-to-end system behaviour: launchers, engine-on-real-model, resume."""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_serve_launcher_runs():
+    from repro.launch.serve import main
+    row = main(["--model", "llama3-8b", "--scheduler", "rotasched",
+                "--rps", "8", "--duration", "6", "--hbm-blocks", "2000"])
+    assert 0.0 <= row["ttft_attainment"] <= 1.0
+    assert row["throughput_tok_s"] > 0
+
+
+def test_serve_launcher_all_schedulers():
+    from repro.launch.serve import main
+    for sched in ("fcfs", "wf", "sf", "sjf", "ltr", "lightllm"):
+        row = main(["--model", "llama3-8b", "--scheduler", sched,
+                    "--rps", "6", "--duration", "4"])
+        assert row["n"] > 0, sched
+
+
+def test_train_launcher_and_resume(tmp_path):
+    from repro.launch.train import main
+    losses = main(["--arch", "yi-34b", "--reduced", "--steps", "8",
+                   "--batch", "4", "--seq", "32", "--ckpt-dir",
+                   str(tmp_path), "--ckpt-every", "4", "--log-every", "100"])
+    assert len(losses) == 8
+    # resume continues from step 8 checkpoint
+    more = main(["--arch", "yi-34b", "--reduced", "--steps", "10",
+                 "--batch", "4", "--seq", "32", "--ckpt-dir", str(tmp_path),
+                 "--resume", "--log-every", "100"])
+    assert len(more) == 2
+
+
+def test_train_int8_moments(tmp_path):
+    from repro.launch.train import main
+    losses = main(["--arch", "yi-34b", "--reduced", "--steps", "6",
+                   "--batch", "4", "--seq", "32", "--moments-dtype", "int8",
+                   "--log-every", "100"])
+    assert losses[-1] < losses[0] + 0.5
+
+
+def test_dryrun_importable_without_jax_init():
+    """mesh.py import must not touch jax device state."""
+    code = ("import repro.launch.mesh as m; import jax; "
+            "assert not jax._src.xla_bridge._backends, 'jax initialized!'")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env={"PYTHONPATH": str(ROOT / "src"),
+                                       "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stderr

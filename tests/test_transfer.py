@@ -1,0 +1,68 @@
+"""Transfer engine: paper Table 1 reproduction + monotonicity properties."""
+import pytest
+
+from repro.configs import GH200, get_config
+from repro.core.blocktable import TransferDesc
+from repro.core.duplexkv import block_bytes_of
+from repro.core.transfer import TransferEngine
+
+PAPER_TABLE1_MS = {"naive": 1556.15, "ms": 159.87, "ms_mk": 63.14,
+                   "duplex": 46.80}
+
+
+def _descs(bb, segs, total_bytes):
+    n = int(total_bytes) // bb
+    return [TransferDesc(i, 0, "d2h", 0, 0, bb, segs) for i in range(n)]
+
+
+@pytest.mark.parametrize("mode", list(PAPER_TABLE1_MS))
+def test_table1_reproduction(mode):
+    cfg = get_config("qwen2.5-32b")
+    bb, segs = block_bytes_of(cfg, 16)
+    assert bb == 4 << 20 and segs == 64        # paper: 4MB block, 64KB segment
+    segs_m = segs if mode == "naive" else 1
+    d = _descs(bb, segs_m, 8e9)
+    eng = TransferEngine(GH200.link, mode)
+    st = eng.execute(d, list(d))
+    assert st.e2e_time * 1e3 == pytest.approx(PAPER_TABLE1_MS[mode], rel=0.03)
+
+
+def test_ideal_duplex_matches_paper():
+    eng = TransferEngine(GH200.link, "duplex")
+    assert eng.ideal_duplex_time(8e9, 8e9) * 1e3 == pytest.approx(41.66,
+                                                                  rel=0.01)
+
+
+def test_mode_ordering():
+    cfg = get_config("llama3-8b")
+    bb, segs = block_bytes_of(cfg, 16)
+    times = {}
+    for mode in ("naive", "ms", "ms_mk", "duplex"):
+        sm = segs if mode == "naive" else 1
+        d = _descs(bb, sm, 1e9)
+        times[mode] = TransferEngine(GH200.link, mode).execute(d, list(d)).e2e_time
+    assert times["duplex"] < times["ms_mk"] < times["ms"] < times["naive"]
+
+
+def test_effective_bw_monotone():
+    link = GH200.link
+    prev = 0.0
+    for size in (1 << 12, 64 << 10, 1 << 20, 4 << 20, 64 << 20, 1 << 30):
+        bw = link.effective_bw(size)
+        assert bw >= prev
+        prev = bw
+    assert link.effective_bw(1 << 30) == link.peak_bw
+
+
+def test_duplex_caps_at_dram_bandwidth():
+    eng = TransferEngine(GH200.link, "duplex")
+    d = _descs(4 << 20, 1, 4e9)
+    st = eng.execute(d, list(d))
+    per_dir = st.d2h_bytes / st.d2h_time
+    assert per_dir <= GH200.link.duplex_total_bw / 2 * 1.01
+
+
+def test_ssm_state_block_sizing():
+    cfg = get_config("mamba2-2.7b")
+    bb, segs = block_bytes_of(cfg, 16)
+    assert bb > 0 and segs == cfg.num_layers   # state rotated per layer

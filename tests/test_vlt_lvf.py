@@ -1,0 +1,107 @@
+"""VLT formula + LVF (Algorithm 1) properties, incl. hypothesis fuzzing."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.configs.base import RotaSchedConfig, SLOConfig
+from repro.core.rotasched import lvf_schedule
+from repro.core.types import Request, RequestState
+from repro.core.vlt import vlt
+
+CFG = RotaSchedConfig(alpha=3.0, beta_b=0.0, beta_f=0.5, b_xfer=100)
+
+
+def _req(rid, state, *, arr=0.0, t_last=None, t_run=None, prompt=64, out=64):
+    r = Request(req_id=rid, arrival_time=arr, prompt_len=prompt,
+                output_len=out, slo=SLOConfig(ttft_s=5.0, tbt_s=0.1))
+    r.state = state
+    r.t_last_token = t_last
+    r.t_run_start = t_run
+    return r
+
+
+# -- VLT formula -------------------------------------------------------------
+
+def test_vlt_waiting_tolerance():
+    r = _req(0, RequestState.WAITING, arr=10.0)
+    # within tolerance beta_f * S_F = 2.5s => 0
+    assert vlt(r, 12.0, CFG) == 0.0
+    assert vlt(r, 13.0, CFG) == pytest.approx(0.5)
+
+
+def test_vlt_rotary_alpha_scaling():
+    r = _req(0, RequestState.ROTARY, t_last=10.0)
+    assert vlt(r, 10.4, CFG) == pytest.approx(3 * 0.4)
+    cfg2 = RotaSchedConfig(alpha=1.0, beta_b=2.0, beta_f=0.5)
+    assert vlt(r, 10.1, cfg2) == 0.0   # within beta_b tolerance (0.2s)
+
+
+def test_vlt_running_negative():
+    r = _req(0, RequestState.RUNNING, t_run=5.0)
+    assert vlt(r, 7.0, CFG) == -2.0
+
+
+# -- Algorithm 1 -------------------------------------------------------------
+
+def test_fcfs_fallback_when_memory_sufficient():
+    reqs = [_req(0, RequestState.WAITING, arr=0),
+            _req(1, RequestState.ROTARY, t_last=0.0)]
+    d = lvf_schedule(reqs, t_now=10.0, b_hbm_free=1000, block_size=16, cfg=CFG)
+    assert d.fcfs_fallback and len(d.prioritized) == 2 and not d.preempted
+
+
+def test_preempts_longest_running_first():
+    old = _req(0, RequestState.RUNNING, t_run=0.0, prompt=160, out=160)
+    new = _req(1, RequestState.RUNNING, t_run=9.0, prompt=160, out=160)
+    lag = _req(2, RequestState.WAITING, arr=1.0, prompt=160, out=160)
+    filler = _req(3, RequestState.WAITING, arr=9.9, prompt=800, out=16)
+    d = lvf_schedule([old, new, lag, filler], t_now=10.0, b_hbm_free=0,
+                     block_size=16, cfg=CFG)
+    assert lag in d.prioritized
+    assert old in d.preempted and new not in d.preempted
+
+
+states = st.sampled_from([RequestState.WAITING, RequestState.RUNNING,
+                          RequestState.ROTARY])
+
+
+@st.composite
+def request_pools(draw):
+    n = draw(st.integers(1, 30))
+    reqs = []
+    for i in range(n):
+        state = draw(states)
+        r = _req(i, state, arr=draw(st.floats(0, 50)),
+                 prompt=draw(st.integers(1, 512)),
+                 out=draw(st.integers(1, 256)))
+        if state != RequestState.WAITING:
+            r.t_last_token = draw(st.floats(0, 60))
+            r.t_run_start = draw(st.floats(0, 60))
+        reqs.append(r)
+    return reqs
+
+
+@given(request_pools(), st.integers(0, 500), st.integers(0, 400))
+@settings(max_examples=150, deadline=None)
+def test_lvf_invariants(reqs, b_free, b_xfer):
+    cfg = RotaSchedConfig(alpha=3.0, beta_b=0.0, beta_f=0.5, b_xfer=b_xfer)
+    d = lvf_schedule(reqs, t_now=60.0, b_hbm_free=b_free, block_size=16,
+                     cfg=cfg)
+    blk = lambda r: r.blocks_needed(16)
+    # preempted are running; prioritized are waiting/rotary
+    assert all(r.state == RequestState.RUNNING for r in d.preempted)
+    assert all(r.state in (RequestState.WAITING, RequestState.ROTARY)
+               for r in d.prioritized)
+    assert len(set(id(r) for r in d.prioritized)) == len(d.prioritized)
+    if d.fcfs_fallback:
+        assert not d.preempted
+        assert sum(map(blk, d.prioritized)) <= b_free
+    else:
+        # admitted work fits within free + transfer budget
+        assert sum(map(blk, d.prioritized)) <= b_free + b_xfer
+        # preemption stops once the extra demand is covered
+        demand = sum(map(blk, d.prioritized))
+        extra = max(demand - b_free, 0)
+        if d.preempted:
+            freed_before_last = sum(map(blk, d.preempted[:-1]))
+            assert freed_before_last < extra
