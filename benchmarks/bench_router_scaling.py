@@ -1,0 +1,35 @@
+"""Multi-replica scaling: aggregate SLO attainment vs replica count.
+
+The paper's single-superchip results (RotaSched + DuplexKV) should compose
+under a cluster front-end: N replicas at aggregate rate R must hold TTFT at
+least as well as one replica at R, and routing policy should matter exactly
+when per-replica memory contention appears. Grid: replicas x policy at a
+fixed aggregate rps past the single-replica contention knee.
+
+    PYTHONPATH=src python benchmarks/bench_router_scaling.py [--quick]
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from common import QUICK, emit, run_router_sim, run_sim
+
+MODEL = "qwen2.5-32b"
+RPS = 22.0 if not QUICK else 14.0
+DUR = 20.0 if not QUICK else 8.0
+
+
+def main():
+    base = run_sim(MODEL, RPS, "rotasched", duration=DUR)
+    emit(f"router,{MODEL},replicas=1,policy=-", base)
+    for replicas in (2, 4) if not QUICK else (2,):
+        for policy in ("round-robin", "least-loaded", "slo-aware"):
+            row = run_router_sim(MODEL, RPS, "rotasched", replicas=replicas,
+                                 policy=policy, duration=DUR)
+            emit(f"router,{MODEL},replicas={replicas},policy={policy}", row)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,7 @@ from repro.configs import (GH200, H200_PCIE, HardwareProfile, LinkProfile,
                            RotaSchedConfig, ServingConfig, get_config)
 from repro.serving.engine import ServingEngine
 from repro.serving.metrics import SLOReport
+from repro.serving.router import Router
 from repro.serving.workload import generate_requests
 
 # model -> (hbm_blocks, rps grid)
@@ -65,6 +66,35 @@ def run_sim(model: str, rps: float, scheduler: str, *,
                eager_blocks=eng.stats.eager_blocks,
                stall_s=round(eng.stats.stall_time, 2),
                iters=eng.stats.iterations)
+    return row
+
+
+def run_router_sim(model: str, rps: float, scheduler: str, *,
+                   replicas: int, policy: str = "least-loaded",
+                   dataset: str = "sharegpt", hw: HardwareProfile = GH200,
+                   duration: float = DURATION_S, seed: int = 1,
+                   **sv_overrides) -> Dict:
+    """Serve one trace at aggregate ``rps`` across N router-fronted replicas."""
+    cfg = get_config(model)
+    hbm, _ = MODEL_SETUP[model]
+    sv_kw = dict(num_hbm_blocks=hbm, num_dram_blocks=100000,
+                 scheduler=scheduler)
+    sv_kw.update(sv_overrides)
+    sv = ServingConfig(**sv_kw)
+    reqs = generate_requests(dataset, rps=rps, duration_s=duration, seed=seed)
+    router = Router(cfg, sv, hw, replicas=replicas, policy=policy)
+    t0 = time.time()
+    rep = router.run(reqs, max_time_s=30 * duration)
+    stats = router.aggregate_stats()
+    row = rep.row()
+    row.update(model=model, dataset=dataset, rps=rps, scheduler=scheduler,
+               replicas=replicas, policy=policy,
+               wall_s=round(time.time() - t0, 1),
+               active_rotations=stats.active_rotations,
+               passive=stats.passive_preemptions,
+               eager_blocks=stats.eager_blocks,
+               stall_s=round(stats.stall_time, 2),
+               iters=stats.iterations)
     return row
 
 

@@ -21,6 +21,7 @@ MODULES = [
     ("fig22", "benchmarks.bench_throughput"),
     ("fig23", "benchmarks.bench_fcfs_sjf"),
     ("roofline", "benchmarks.bench_roofline"),
+    ("router", "benchmarks.bench_router_scaling"),
 ]
 
 

@@ -2,7 +2,12 @@
 (RotaSched+DuplexKV) vs vLLM-style FCFS vs LTR under memory contention
 (simulated GH200 timing around the real scheduling stack).
 
+Requests are fed through the **online API** (engine.add_request while the
+engine steps) — the same path the multi-replica router uses; pass
+``--replicas 2`` to serve the same trace behind the SLO-aware router.
+
     PYTHONPATH=src python examples/serve_slo_comparison.py [--rps 22]
+    PYTHONPATH=src python examples/serve_slo_comparison.py --replicas 2
 """
 import argparse
 import sys
@@ -12,13 +17,28 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.configs import GH200, ServingConfig, get_config
 from repro.serving.engine import ServingEngine
+from repro.serving.router import Router
 from repro.serving.workload import generate_requests
+
+
+def serve_online(cfg, sv, reqs, replicas):
+    """Feed the trace through the online add_request/step API."""
+    if replicas > 1:
+        router = Router(cfg, sv, GH200, replicas=replicas, policy="slo-aware")
+        rep = router.run(reqs)
+        return rep, router.aggregate_stats()
+    eng = ServingEngine(cfg, sv, GH200)
+    for r in sorted(reqs, key=lambda r: r.arrival_time):
+        eng.add_request(r)
+    rep = eng.drain()
+    return rep, eng.stats
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rps", type=float, default=22.0)
     ap.add_argument("--duration", type=float, default=30.0)
+    ap.add_argument("--replicas", type=int, default=1)
     args = ap.parse_args()
 
     cfg = get_config("qwen2.5-32b")
@@ -29,13 +49,12 @@ def main():
                            scheduler=sched)
         reqs = generate_requests("sharegpt", rps=args.rps,
                                  duration_s=args.duration, seed=1)
-        eng = ServingEngine(cfg, sv, GH200)
-        rep = eng.run(reqs)
+        rep, stats = serve_online(cfg, sv, reqs, args.replicas)
         name = "SuperInfer" if sched == "rotasched" else sched
         print(f"{name:12s} {rep.ttft_attainment:9.3f} {rep.tbt_attainment:9.3f} "
               f"{rep.p99_ttft:8.2f}s {rep.p99_tbt*1e3:7.0f}ms "
               f"{rep.throughput_tok_s:7.0f} "
-              f"{eng.stats.active_rotations + eng.stats.passive_preemptions:9d}")
+              f"{stats.active_rotations + stats.passive_preemptions:9d}")
 
 
 if __name__ == "__main__":

@@ -41,7 +41,16 @@ def run(num_hbm_blocks, label, cfg):
     real = RealExecutor(cfg, seed=42)
     eng = ServingEngine(cfg, sv, GH200, real_executor=real)
     reqs = make_requests(8, cfg, seed=3)
-    rep = eng.run(reqs)
+    # online API: first half submitted up front, the rest arrive mid-run —
+    # the engine keeps stepping while new work lands (rotation must stay
+    # lossless across the admission seam too).
+    for r in reqs[:4]:
+        eng.add_request(r)
+    for _ in range(3):
+        eng.step()
+    for r in reqs[4:]:
+        eng.add_request(r)
+    rep = eng.drain()
     streams = {r.req_id: list(r.generated_ids) for r in reqs}
     print(f"[{label}] rotations={eng.stats.active_rotations + eng.stats.passive_preemptions} "
           f"ttft_att={rep.ttft_attainment:.2f} iters={eng.stats.iterations}")

@@ -15,7 +15,7 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.configs.base import HardwareProfile, ModelConfig, ServingConfig
-from repro.core.blocktable import TransferDesc, TwoTierBlockTable
+from repro.core.blocktable import OutOfBlocks, TransferDesc, TwoTierBlockTable
 from repro.core.transfer import TransferEngine, TransferStats, engine_for_flags
 
 
@@ -85,7 +85,7 @@ class DuplexKV:
             try:
                 h2d.extend(self.table.swap_in(rid))
                 admitted.append(rid)
-            except Exception:  # OutOfBlocks: stays rotary this iteration
+            except OutOfBlocks:  # stays rotary this iteration
                 continue
         swapin_reqs = admitted
         stats = self.engine.execute(d2h, h2d)

@@ -51,7 +51,7 @@ def lvf_schedule(requests: Sequence[Request], *, t_now: float,
     # strictly lagging requests (VLT > 0) spend the B_xfer rotation budget.
     # (Algorithm 1 as printed uses VLT >= 0, which under ReLU admits every
     # waiting/rotary request and rotates at full budget each iteration even
-    # at equilibrium — see DESIGN.md §faithfulness.)
+    # at equilibrium — see DESIGN.md §Faithfulness.)
     b_free = b_hbm_free
     b_left = cfg.b_xfer
     prioritized: List[Request] = []

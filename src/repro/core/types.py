@@ -55,6 +55,33 @@ class Request:
         toks = min(self.total_len + lookahead, self.prompt_len + self.output_len)
         return -(-max(toks, 1) // block_size)
 
+    # -- lifecycle transitions (owned by the admission layer) ----------------
+    def start_running(self, t: float) -> None:
+        """WAITING -> RUNNING: first prefill chunk scheduled on device."""
+        self.state = RequestState.RUNNING
+        self.t_run_start = t
+
+    def rotate_out(self) -> None:
+        """RUNNING -> ROTARY: KV leaves HBM (active rotation or OOM preempt)."""
+        self.state = RequestState.ROTARY
+        self.rotations += 1
+
+    def resume(self, t: float) -> None:
+        """ROTARY -> RUNNING: swap-in transfer completed."""
+        self.state = RequestState.RUNNING
+        self.t_run_start = t
+
+    def finish_at(self, t: float) -> None:
+        self.state = RequestState.FINISHED
+        self.finish_time = t
+
+    def record_token(self, t: float) -> None:
+        self.tokens_generated += 1
+        self.token_times.append(t)
+        self.t_last_token = t
+        if self.t_first_token is None:
+            self.t_first_token = t
+
     # -- metrics -------------------------------------------------------------
     def ttft(self) -> Optional[float]:
         if self.t_first_token is None:

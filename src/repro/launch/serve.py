@@ -3,6 +3,11 @@ around the real scheduler/block-table/transfer stack) and print SLO metrics.
 
     PYTHONPATH=src python -m repro.launch.serve --model qwen2.5-32b \
         --scheduler rotasched --rps 20 --duration 40
+
+Multi-replica serving (each replica a full engine behind the router):
+
+    PYTHONPATH=src python -m repro.launch.serve --rps 20 --duration 40 \
+        --replicas 2 --router slo-aware
 """
 from __future__ import annotations
 
@@ -12,6 +17,8 @@ import json
 
 
 def main(argv=None):
+    from repro.serving.router import ROUTER_POLICIES
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="qwen2.5-32b")
     ap.add_argument("--scheduler", default="rotasched",
@@ -23,6 +30,11 @@ def main(argv=None):
     ap.add_argument("--duration", type=float, default=40.0)
     ap.add_argument("--hw", default="gh200",
                     choices=["gh200", "h200-pcie", "tpu-v5e"])
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="number of engine replicas behind the router")
+    ap.add_argument("--router", default="least-loaded",
+                    choices=list(ROUTER_POLICIES),
+                    help="routing policy (used when --replicas > 1)")
     ap.add_argument("--hbm-blocks", type=int, default=4000)
     ap.add_argument("--dram-blocks", type=int, default=100000)
     ap.add_argument("--alpha", type=float, default=3.0)
@@ -36,9 +48,12 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
 
     from repro.configs import HW_PROFILES, RotaSchedConfig, ServingConfig, get_config
     from repro.serving.engine import ServingEngine
+    from repro.serving.router import Router
     from repro.serving.workload import generate_requests
 
     cfg = get_config(args.model)
@@ -56,14 +71,29 @@ def main(argv=None):
     hw = HW_PROFILES[args.hw]
     reqs = generate_requests(args.dataset, args.rps, args.duration,
                              seed=args.seed)
-    eng = ServingEngine(cfg, sv, hw)
-    rep = eng.run(reqs)
+
+    if args.replicas > 1:
+        router = Router(cfg, sv, hw, replicas=args.replicas,
+                        policy=args.router)
+        rep = router.run(reqs)
+        stats = router.aggregate_stats()
+    else:
+        eng = ServingEngine(cfg, sv, hw)
+        rep = eng.run(reqs)
+        stats = eng.stats
     row = rep.row()
     row.update(scheduler=args.scheduler, model=args.model, rps=args.rps,
-               active_rotations=eng.stats.active_rotations,
-               passive_preemptions=eng.stats.passive_preemptions,
-               eager_blocks=eng.stats.eager_blocks,
-               stall_time=round(eng.stats.stall_time, 3))
+               active_rotations=stats.active_rotations,
+               passive_preemptions=stats.passive_preemptions,
+               eager_blocks=stats.eager_blocks,
+               stall_time=round(stats.stall_time, 3))
+    if args.replicas > 1:
+        row.update(replicas=args.replicas, router=args.router,
+                   per_replica=[
+                       dict(replica=p.idx, n=p.n_routed,
+                            ttft_attainment=p.report.ttft_attainment,
+                            p99_ttft=p.report.p99_ttft)
+                       for p in router.per_replica_reports()])
     if args.json:
         print(json.dumps(row, indent=1))
     else:

@@ -1,0 +1,350 @@
+"""EngineCore: one-iteration-at-a-time serving core with an online API.
+
+The monolithic ``ServingEngine.run()`` replay loop is decomposed into three
+layers that compose per iteration (see DESIGN.md §Engine-core architecture):
+
+    scheduler policy  ->  AdmissionController  ->  BatchBuilder  ->  execute/
+    (serving.schedulers)  (state transitions +     (BatchPlan, no   transfer +
+                           block-budget accounting) Request mutation) commit
+
+``EngineCore.step()`` performs exactly one iteration — arrivals, schedule,
+admission/preemption, batch build, execute/transfer, commit — and returns an
+``IterationOutcome`` describing what happened. Requests may be added while
+the engine runs (``add_request``), which is what the multi-replica router
+(serving.router) and any future async front-end build on. The legacy batch
+driver ``ServingEngine.run(requests)`` is now a thin replay loop over this
+core and produces bit-identical metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import List, Optional, Sequence, Tuple
+
+from repro.configs.base import (HardwareProfile, ModelConfig, ServingConfig,
+                                GH200)
+from repro.core.blocktable import OutOfBlocks
+from repro.core.duplexkv import DuplexKV
+from repro.core.types import Request, RequestState
+from repro.serving.executor import BatchPlan, SimExecutor
+from repro.serving.schedulers import Scheduler, make_scheduler
+
+
+@dataclasses.dataclass
+class EngineStats:
+    iterations: int = 0
+    exec_time: float = 0.0
+    transfer_time: float = 0.0
+    stall_time: float = 0.0            # transfer time NOT hidden by exec
+    passive_preemptions: int = 0
+    active_rotations: int = 0
+    eager_blocks: int = 0
+    dropped: int = 0
+
+    def merged_with(self, other: "EngineStats") -> "EngineStats":
+        return EngineStats(*(a + b for a, b in
+                             zip(dataclasses.astuple(self),
+                                 dataclasses.astuple(other))))
+
+
+@dataclasses.dataclass
+class AdmissionOutcome:
+    """What the admission layer decided this iteration."""
+    preempt_ids: List[int] = dataclasses.field(default_factory=list)
+    swapin_ids: List[int] = dataclasses.field(default_factory=list)
+    started: List[Request] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class IterationOutcome:
+    """One ``EngineCore.step()``: timing, the batch, and every transition."""
+    t_start: float
+    t_end: float
+    idle: bool = False                 # no runnable work: clock jump only
+    exec_s: float = 0.0
+    transfer_s: float = 0.0
+    plan: Optional[BatchPlan] = None
+    admitted: List[int] = dataclasses.field(default_factory=list)   # W -> R
+    resumed: List[int] = dataclasses.field(default_factory=list)    # S -> R
+    preempted: List[int] = dataclasses.field(default_factory=list)  # R -> S
+    finished: List[int] = dataclasses.field(default_factory=list)
+
+
+class AdmissionController:
+    """Owns request lifecycle transitions and HBM block-budget accounting.
+
+    The scheduler expresses *policy* (who should run); admission enforces
+    *feasibility*: which prioritized requests fit the free-block budget once
+    preempted requests release theirs, and which running requests must be
+    passively rotated when an allocation fails mid-batch (vLLM's OOM path).
+    """
+
+    def __init__(self, kv: DuplexKV, stats: EngineStats, block_size: int,
+                 real_executor=None):
+        self.kv = kv
+        self.stats = stats
+        self.bs = block_size
+        self.real = real_executor
+
+    def apply(self, decision) -> AdmissionOutcome:
+        out = AdmissionOutcome()
+        for r in decision.preempted:
+            if r.state != RequestState.RUNNING:
+                continue
+            out.preempt_ids.append(r.req_id)
+            r.rotate_out()
+            self.stats.active_rotations += 1
+            if self.real is not None:
+                self.real.swap_out(r.req_id)
+
+        freed = sum(r.blocks_needed(self.bs) for r in decision.preempted)
+        budget = self.kv.hbm_free_blocks + freed
+        for r in decision.prioritized:
+            need = r.blocks_needed(self.bs)
+            if need > budget:
+                continue
+            if r.state == RequestState.ROTARY \
+                    and r.req_id not in out.preempt_ids:
+                out.swapin_ids.append(r.req_id)
+                budget -= need
+            elif r.state == RequestState.WAITING:
+                out.started.append(r)
+                budget -= need
+        return out
+
+    def passive_preempt(self, r: Request, out: AdmissionOutcome) -> None:
+        out.preempt_ids.append(r.req_id)
+        r.rotate_out()
+        self.stats.passive_preemptions += 1
+        if self.real is not None:
+            self.real.swap_out(r.req_id)
+
+    def start_prefill(self, r: Request, t: float) -> None:
+        r.start_running(t)
+
+    def complete_swap_in(self, r: Request, t: float) -> None:
+        r.resume(t)
+        if self.real is not None:
+            self.real.swap_in(r.req_id)
+
+
+class BatchBuilder:
+    """Builds one iteration's ``BatchPlan`` (decodes + chunked prefills).
+
+    Allocation failures are routed through the admission controller's passive
+    preemption; chunk sizes live on the plan (``prefill_chunks``), never on
+    the ``Request``.
+    """
+
+    def __init__(self, serving: ServingConfig, kv: DuplexKV,
+                 admission: AdmissionController):
+        self.serving = serving
+        self.kv = kv
+        self.admission = admission
+
+    def build(self, active: Sequence[Request], adm: AdmissionOutcome,
+              t: float) -> BatchPlan:
+        bs = self.serving.block_size
+        plan = BatchPlan()
+        running = [r for r in active if r.state == RequestState.RUNNING]
+        decodes = [r for r in running if r.prefill_done]
+        decodes = decodes[:self.serving.max_batch_size]
+        for r in decodes:
+            try:
+                self.kv.grow(r.req_id, r.blocks_needed(bs, lookahead=1))
+            except OutOfBlocks:
+                self.admission.passive_preempt(r, adm)
+                continue
+            plan.decode_reqs.append(r.req_id)
+            plan.decode_kv_tokens += r.total_len
+
+        chunk_budget = self.serving.prefill_chunk
+        for r in [x for x in running if not x.prefill_done] + adm.started:
+            if chunk_budget <= 0:
+                break
+            take = min(chunk_budget, r.prompt_len - r.prefill_pos)
+            if take <= 0:
+                continue
+            try:
+                needed = -(-(r.prefill_pos + take) // bs)
+                self.kv.grow(r.req_id, needed)
+            except OutOfBlocks:
+                if r.state == RequestState.RUNNING:
+                    self.admission.passive_preempt(r, adm)
+                continue
+            if r.state == RequestState.WAITING:
+                self.admission.start_prefill(r, t)
+            plan.prefill_chunks.append((r.req_id, take))
+            plan.prefill_tokens += take
+            plan.prefill_attn_tokens += take * (r.prefill_pos + take)
+            chunk_budget -= take
+        return plan
+
+
+class EngineCore:
+    """Event-driven serving core: ``add_request`` any time, ``step`` once per
+    iteration, ``drain`` to completion. One EngineCore == one replica."""
+
+    def __init__(self, cfg: ModelConfig, serving: ServingConfig,
+                 hw: HardwareProfile = GH200,
+                 scheduler: Optional[Scheduler] = None,
+                 executor: Optional[SimExecutor] = None,
+                 real_executor=None):
+        self.cfg = cfg
+        self.serving = serving
+        self.hw = hw
+        self.scheduler = scheduler or make_scheduler(serving.scheduler,
+                                                     serving.rotary)
+        self.executor = executor or SimExecutor(cfg, hw)
+        self.real = real_executor
+        self.kv = DuplexKV(cfg, serving, hw)
+        self.stats = EngineStats()
+        self.clock = 0.0
+        self._exec_ema = 0.03   # for auto B_xfer sizing
+        self.admission = AdmissionController(self.kv, self.stats,
+                                             serving.block_size,
+                                             real_executor)
+        self.batcher = BatchBuilder(serving, self.kv, self.admission)
+        self.active: List[Request] = []
+        self._pending: List[Tuple[float, int, Request]] = []   # arrival heap
+        self._seq = itertools.count()
+        self.submitted: List[Request] = []     # every request ever added
+
+    # ------------------------------------------------------------- online API
+    def add_request(self, req: Request) -> None:
+        """Enqueue a request; it enters the engine once ``clock`` reaches its
+        ``arrival_time`` (requests with past arrival times enter next step)."""
+        heapq.heappush(self._pending, (req.arrival_time, next(self._seq), req))
+        self.submitted.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.active or self._pending)
+
+    @property
+    def load(self) -> int:
+        """Requests in flight (admitted or queued) — router load signal."""
+        return len(self.active) + len(self._pending)
+
+    def queued_prefill_tokens(self) -> int:
+        """Prompt tokens not yet prefilled — a TTFT-pressure signal."""
+        live = [r for r in self.active] + [p[2] for p in self._pending]
+        return sum(r.prompt_len - r.prefill_pos for r in live
+                   if not r.prefill_done)
+
+    def drain(self, max_time_s: float = 1e9) -> None:
+        while self.has_work and self.clock < max_time_s:
+            self.step()
+
+    # ------------------------------------------------------------- iteration
+    def step(self) -> IterationOutcome:
+        """Run exactly one engine iteration at the current clock."""
+        t = self.clock
+        self._ingest(t)
+        if not self.active:
+            if self._pending:   # idle: jump to the next arrival
+                self.clock = self._pending[0][0]
+            return IterationOutcome(t_start=t, t_end=self.clock, idle=True)
+
+        # -- schedule --------------------------------------------------------
+        bs = self.serving.block_size
+        b_xfer = None
+        if self.serving.auto_b_xfer:
+            # size the per-iteration transfer budget to what the duplex
+            # link can hide under model execution (§4.2.3 co-design)
+            rate = self.kv.engine.sustained_block_rate(
+                self.kv.block_bytes, self.kv.table.segments_per_block)
+            b_xfer = max(int(rate * self._exec_ema), 1)
+        decision = self.scheduler.schedule(
+            self.active, t, self.kv.hbm_free_blocks, bs, b_xfer=b_xfer)
+
+        # -- admission / preemption -----------------------------------------
+        adm = self.admission.apply(decision)
+
+        # -- build device batch ---------------------------------------------
+        plan = self.batcher.build(self.active, adm, t)
+        # budgeted-but-unstarted requests (chunk budget exhausted, OOB) stay
+        # WAITING and are not admissions; they retry next iteration
+        admitted = [r.req_id for r in adm.started
+                    if r.state == RequestState.RUNNING]
+
+        # -- execute + transfer (pipelined or serial) -----------------------
+        exec_s = self.executor.step_time(plan)
+        xfers = self.kv.plan_iteration(adm.preempt_ids, adm.swapin_ids,
+                                       iteration_budget_s=exec_s)
+        tr_s = xfers.stats.e2e_time
+        if self.serving.pipeline_overlap:
+            iter_s = max(exec_s, tr_s, 1e-4)
+            self.stats.stall_time += max(tr_s - exec_s, 0.0)
+        else:
+            iter_s = exec_s + tr_s + 0.001   # serial schedule+transfer
+            self.stats.stall_time += tr_s
+        self.clock = t + iter_s
+        self.stats.iterations += 1
+        self.stats.exec_time += exec_s
+        self.stats.transfer_time += tr_s
+        self._exec_ema = 0.9 * self._exec_ema + 0.1 * exec_s
+        if xfers.eager_stats:
+            self.stats.eager_blocks += int(
+                xfers.eager_stats.d2h_bytes // max(self.kv.block_bytes, 1))
+
+        # -- commit results --------------------------------------------------
+        resumed: List[int] = []
+        for rid in xfers.swapin_done:
+            r = self._by_id(rid)
+            if r is not None and r.state == RequestState.ROTARY:
+                self.admission.complete_swap_in(r, self.clock)
+                resumed.append(rid)
+
+        for rid, take in plan.prefill_chunks:
+            r = self._by_id(rid)
+            if r is None:
+                continue
+            r.prefill_pos += take
+            if r.prefill_done and r.tokens_generated == 0:
+                if self.real is not None and r.prompt_ids is not None:
+                    tok = self.real.prefill(
+                        r.req_id, r.prompt_ids,
+                        capacity=r.prompt_len + r.output_len + 1)
+                    r.generated_ids.append(tok)
+                r.record_token(self.clock)    # first token at prefill tail
+            self.kv.sync_progress(r.req_id, r.prefill_pos)
+
+        for rid in plan.decode_reqs:
+            r = self._by_id(rid)
+            if r is None or r.state != RequestState.RUNNING:
+                continue
+            if self.real is not None and r.generated_ids:
+                tok = self.real.decode(r.req_id, r.generated_ids[-1],
+                                       r.total_len - 1)
+                r.generated_ids.append(tok)
+            r.record_token(self.clock)
+            self.kv.sync_progress(r.req_id, r.total_len)
+
+        finished: List[int] = []
+        for r in self.active:
+            if r.done and r.state != RequestState.FINISHED:
+                r.finish_at(self.clock)
+                self.kv.finish(r.req_id)
+                if self.real is not None:
+                    self.real.drop(r.req_id)
+                finished.append(r.req_id)
+        self.active = [r for r in self.active
+                       if r.state != RequestState.FINISHED]
+
+        return IterationOutcome(
+            t_start=t, t_end=self.clock, exec_s=exec_s, transfer_s=tr_s,
+            plan=plan, admitted=admitted,
+            resumed=resumed, preempted=adm.preempt_ids, finished=finished)
+
+    # ------------------------------------------------------------------ utils
+    def _ingest(self, t: float) -> None:
+        while self._pending and self._pending[0][0] <= t:
+            self.active.append(heapq.heappop(self._pending)[2])
+
+    def _by_id(self, rid: int) -> Optional[Request]:
+        for r in self.active:
+            if r.req_id == rid:
+                return r
+        return None

@@ -1,37 +1,35 @@
-"""The serving engine: continuous batching + chunked prefill + rotation.
+"""ServingEngine: the single-replica serving front-end.
 
-Discrete-event loop around the *real* scheduler (core.rotasched & friends)
-and the *real* two-tier block table (core.blocktable): only device execution
-time and link transfer time come from calibrated models (serving.executor,
-core.transfer). The cross-iteration pipeline (paper Fig. 15) is the
-``pipeline_overlap`` flag: schedule+transfers overlap model execution, so the
-iteration takes max(exec, transfer) instead of their sum.
+All per-iteration mechanics live in serving.core (EngineCore + admission +
+batch building); this module keeps the user-facing surface:
+
+  * the **online API** — ``add_request(req)`` / ``step()`` / ``drain()`` —
+    requests may arrive while the engine runs (used by serving.router and
+    the launchers), and
+  * the legacy **batch driver** ``run(requests)``: a thin replay loop over
+    ``EngineCore.step()`` that produces the same SLOReport the monolithic
+    loop did (tested bit-identical).
+
+Only device execution time and link transfer time come from calibrated
+models (serving.executor, core.transfer); the scheduler, block table and
+transfer planning are the real code paths. The cross-iteration pipeline
+(paper Fig. 15) is the ``pipeline_overlap`` flag: schedule+transfers overlap
+model execution, so an iteration takes max(exec, transfer) instead of their
+sum.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Optional, Sequence
 
 from repro.configs.base import (HardwareProfile, ModelConfig, ServingConfig,
                                 GH200)
-from repro.core.blocktable import OutOfBlocks
-from repro.core.duplexkv import DuplexKV
-from repro.core.types import Request, RequestState
-from repro.serving.executor import BatchPlan, SimExecutor
+from repro.core.types import Request
+from repro.serving.core import EngineCore, EngineStats, IterationOutcome
+from repro.serving.executor import SimExecutor
 from repro.serving.metrics import SLOReport, evaluate
-from repro.serving.schedulers import Scheduler, make_scheduler
+from repro.serving.schedulers import Scheduler
 
-
-@dataclasses.dataclass
-class EngineStats:
-    iterations: int = 0
-    exec_time: float = 0.0
-    transfer_time: float = 0.0
-    stall_time: float = 0.0            # transfer time NOT hidden by exec
-    passive_preemptions: int = 0
-    active_rotations: int = 0
-    eager_blocks: int = 0
-    dropped: int = 0
+__all__ = ["ServingEngine", "EngineStats", "EngineCore", "IterationOutcome"]
 
 
 class ServingEngine:
@@ -40,196 +38,73 @@ class ServingEngine:
                  scheduler: Optional[Scheduler] = None,
                  executor: Optional[SimExecutor] = None,
                  real_executor=None):
-        self.cfg = cfg
-        self.serving = serving
-        self.hw = hw
-        self.scheduler = scheduler or make_scheduler(serving.scheduler,
-                                                     serving.rotary)
-        self.executor = executor or SimExecutor(cfg, hw)
-        self.real = real_executor
-        self.kv = DuplexKV(cfg, serving, hw)
-        self.stats = EngineStats()
-        self.clock = 0.0
-        self._exec_ema = 0.03   # for auto B_xfer sizing
+        self.core = EngineCore(cfg, serving, hw, scheduler=scheduler,
+                               executor=executor, real_executor=real_executor)
 
-    # ------------------------------------------------------------------ loop
+    # ------------------------------------------------------------- delegation
+    @property
+    def cfg(self) -> ModelConfig:
+        return self.core.cfg
+
+    @property
+    def serving(self) -> ServingConfig:
+        return self.core.serving
+
+    @property
+    def hw(self) -> HardwareProfile:
+        return self.core.hw
+
+    @property
+    def scheduler(self) -> Scheduler:
+        return self.core.scheduler
+
+    @property
+    def executor(self) -> SimExecutor:
+        return self.core.executor
+
+    @property
+    def real(self):
+        return self.core.real
+
+    @property
+    def kv(self):
+        return self.core.kv
+
+    @property
+    def stats(self) -> EngineStats:
+        return self.core.stats
+
+    @property
+    def clock(self) -> float:
+        return self.core.clock
+
+    # ------------------------------------------------------------- online API
+    def add_request(self, req: Request) -> None:
+        """Submit a request; served once the engine clock reaches its
+        arrival time. May be called between ``step()`` calls."""
+        self.core.add_request(req)
+
+    def step(self) -> IterationOutcome:
+        """Run one engine iteration (see EngineCore.step)."""
+        return self.core.step()
+
+    @property
+    def has_work(self) -> bool:
+        return self.core.has_work
+
+    def drain(self, max_time_s: float = 1e9) -> SLOReport:
+        """Step until every submitted request finished; return the report."""
+        self.core.drain(max_time_s)
+        return self.report()
+
+    def report(self) -> SLOReport:
+        return evaluate(self.core.submitted, total_time=self.core.clock)
+
+    # ------------------------------------------------------- batch-replay API
     def run(self, requests: Sequence[Request], *,
             max_time_s: float = 1e9) -> SLOReport:
-        pending = sorted(requests, key=lambda r: r.arrival_time)
-        active: List[Request] = []
-        pi = 0
-        bs = self.serving.block_size
-
-        while (pi < len(pending) or active) and self.clock < max_time_s:
-            t = self.clock
-            # -- arrivals ----------------------------------------------------
-            while pi < len(pending) and pending[pi].arrival_time <= t:
-                active.append(pending[pi])
-                pi += 1
-            if not active:
-                if pi < len(pending):
-                    self.clock = pending[pi].arrival_time
-                    continue
-                break
-
-            # -- schedule ----------------------------------------------------
-            b_xfer = None
-            if self.serving.auto_b_xfer:
-                # size the per-iteration transfer budget to what the duplex
-                # link can hide under model execution (§4.2.3 co-design)
-                rate = self.kv.engine.sustained_block_rate(
-                    self.kv.block_bytes, self.kv.table.segments_per_block)
-                b_xfer = max(int(rate * self._exec_ema), 1)
-            decision = self.scheduler.schedule(
-                active, t, self.kv.hbm_free_blocks, bs, b_xfer=b_xfer)
-
-            preempt_ids: List[int] = []
-            for r in decision.preempted:
-                if r.state != RequestState.RUNNING:
-                    continue
-                preempt_ids.append(r.req_id)
-                r.state = RequestState.ROTARY
-                r.rotations += 1
-                self.stats.active_rotations += 1
-                if self.real is not None:
-                    self.real.swap_out(r.req_id)
-
-            freed = sum(r.blocks_needed(bs) for r in decision.preempted)
-            budget = self.kv.hbm_free_blocks + freed
-            swapin_ids: List[int] = []
-            started: List[Request] = []
-            for r in decision.prioritized:
-                need = r.blocks_needed(bs)
-                if need > budget:
-                    continue
-                if r.state == RequestState.ROTARY and r.req_id not in preempt_ids:
-                    swapin_ids.append(r.req_id)
-                    budget -= need
-                elif r.state == RequestState.WAITING:
-                    started.append(r)
-                    budget -= need
-
-            # -- build device batch -------------------------------------------
-            plan = BatchPlan()
-            running = [r for r in active if r.state == RequestState.RUNNING]
-            decodes = [r for r in running if r.prefill_done]
-            decodes = decodes[:self.serving.max_batch_size]
-            for r in decodes:
-                try:
-                    self.kv.grow(r.req_id, r.blocks_needed(bs, lookahead=1))
-                except OutOfBlocks:
-                    # passive preemption (vLLM OOM path)
-                    self._passive_preempt(r, preempt_ids)
-                    continue
-                plan.decode_reqs.append(r.req_id)
-                plan.decode_kv_tokens += r.total_len
-
-            chunk_budget = self.serving.prefill_chunk
-            prefills: List[Request] = []
-            for r in [x for x in running if not x.prefill_done] + started:
-                if chunk_budget <= 0:
-                    break
-                take = min(chunk_budget, r.prompt_len - r.prefill_pos)
-                if take <= 0:
-                    continue
-                try:
-                    needed = -(-(r.prefill_pos + take) // bs)
-                    self.kv.grow(r.req_id, needed)
-                except OutOfBlocks:
-                    if r.state == RequestState.RUNNING:
-                        self._passive_preempt(r, preempt_ids)
-                    continue
-                if r.state == RequestState.WAITING:
-                    r.state = RequestState.RUNNING
-                    r.t_run_start = t
-                prefills.append(r)
-                r._chunk = take  # type: ignore[attr-defined]
-                plan.prefill_tokens += take
-                plan.prefill_attn_tokens += take * (r.prefill_pos + take)
-                chunk_budget -= take
-
-            # -- execute + transfer (pipelined or serial) -----------------------
-            exec_s = self.executor.step_time(plan)
-            xfers = self.kv.plan_iteration(preempt_ids, swapin_ids,
-                                           iteration_budget_s=exec_s)
-            tr_s = xfers.stats.e2e_time
-            if self.serving.pipeline_overlap:
-                iter_s = max(exec_s, tr_s, 1e-4)
-                self.stats.stall_time += max(tr_s - exec_s, 0.0)
-            else:
-                iter_s = exec_s + tr_s + 0.001   # serial schedule+transfer
-                self.stats.stall_time += tr_s
-            self.clock = t + iter_s
-            self.stats.iterations += 1
-            self.stats.exec_time += exec_s
-            self.stats.transfer_time += tr_s
-            self._exec_ema = 0.9 * self._exec_ema + 0.1 * exec_s
-            if xfers.eager_stats:
-                self.stats.eager_blocks += int(
-                    xfers.eager_stats.d2h_bytes // max(self.kv.block_bytes, 1))
-
-            # -- commit results ------------------------------------------------
-            for rid in xfers.swapin_done:
-                r = self._by_id(active, rid)
-                if r is not None and r.state == RequestState.ROTARY:
-                    r.state = RequestState.RUNNING
-                    r.t_run_start = self.clock
-                    if self.real is not None:
-                        self.real.swap_in(rid)
-
-            for r in prefills:
-                take = getattr(r, "_chunk", 0)
-                r.prefill_pos += take
-                if r.prefill_done and r.tokens_generated == 0:
-                    if self.real is not None and r.prompt_ids is not None:
-                        tok = self.real.prefill(
-                            r.req_id, r.prompt_ids,
-                            capacity=r.prompt_len + r.output_len + 1)
-                        r.generated_ids.append(tok)
-                    self._emit_token(r)       # first token at prefill tail
-                self.kv.sync_progress(r.req_id, r.prefill_pos)
-
-            for rid in plan.decode_reqs:
-                r = self._by_id(active, rid)
-                if r is None or r.state != RequestState.RUNNING:
-                    continue
-                if self.real is not None and r.generated_ids:
-                    tok = self.real.decode(r.req_id, r.generated_ids[-1],
-                                           r.total_len - 1)
-                    r.generated_ids.append(tok)
-                self._emit_token(r)
-                self.kv.sync_progress(r.req_id, r.total_len)
-
-            done = [r for r in active if r.done and r.state != RequestState.FINISHED]
-            for r in done:
-                r.state = RequestState.FINISHED
-                r.finish_time = self.clock
-                self.kv.finish(r.req_id)
-                if self.real is not None:
-                    self.real.drop(r.req_id)
-            active = [r for r in active if r.state != RequestState.FINISHED]
-
-        return evaluate(requests, total_time=self.clock)
-
-    # ------------------------------------------------------------------ utils
-    def _emit_token(self, r: Request) -> None:
-        r.tokens_generated += 1
-        r.token_times.append(self.clock)
-        r.t_last_token = self.clock
-        if r.t_first_token is None:
-            r.t_first_token = self.clock
-
-    def _passive_preempt(self, r: Request, preempt_ids: List[int]) -> None:
-        preempt_ids.append(r.req_id)
-        r.state = RequestState.ROTARY
-        r.rotations += 1
-        self.stats.passive_preemptions += 1
-        if self.real is not None:
-            self.real.swap_out(r.req_id)
-
-    @staticmethod
-    def _by_id(active: Sequence[Request], rid: int) -> Optional[Request]:
-        for r in active:
-            if r.req_id == rid:
-                return r
-        return None
+        """Compatibility driver: submit a whole trace, replay to completion."""
+        for r in requests:
+            self.core.add_request(r)
+        self.core.drain(max_time_s)
+        return evaluate(requests, total_time=self.core.clock)

@@ -18,6 +18,8 @@ class BatchPlan:
     """One engine iteration's device work."""
     decode_reqs: List[int] = dataclasses.field(default_factory=list)
     decode_kv_tokens: int = 0            # total KV tokens read by decodes
+    prefill_chunks: List[Tuple[int, int]] = dataclasses.field(
+        default_factory=list)            # (req_id, chunk tokens) this iter
     prefill_tokens: int = 0              # chunked-prefill tokens this iter
     prefill_attn_tokens: int = 0         # sum over prefill chunks of ctx len
 

@@ -34,6 +34,18 @@ class SLOReport:
         return dataclasses.asdict(self)
 
 
+def merge_reports(groups: Sequence[Sequence[Request]],
+                  total_time: float) -> SLOReport:
+    """Aggregate per-replica request groups into one cluster-level report.
+
+    Percentiles are not mergeable from per-replica summaries, so the merge
+    recomputes every metric from the union of the raw requests; counts and
+    attainment come out equal to the request-weighted combination of the
+    per-replica reports (tested in test_engine_core.py).
+    """
+    return evaluate([r for g in groups for r in g], total_time=total_time)
+
+
 def evaluate(requests: Sequence[Request], *, total_time: float) -> SLOReport:
     done = [r for r in requests if r.t_first_token is not None]
     ttft_ok = [r for r in done if r.ttft_ok()]

@@ -1,0 +1,163 @@
+"""Multi-replica front-end: N independent EngineCores behind a routing policy.
+
+Each replica is a full SuperInfer engine (own scheduler, DuplexKV block table,
+clock). The router advances every replica's simulation to a request's arrival
+time before routing it, so load-aware policies see the state an online
+dispatcher would. Policies:
+
+  * ``round-robin``   — arrival order, ignores load (baseline),
+  * ``least-loaded``  — fewest requests in flight,
+  * ``slo-aware``     — least TTFT pressure: pending prefill tokens (the work
+    standing between a new arrival and its first token) plus the decode
+    population as a tiebreaker, scaled by remaining HBM headroom.
+
+``Router.run(trace)`` replays a whole arrival trace; ``add_request``/
+``step``/``drain`` mirror the single-engine online API. Reports come
+per-replica and aggregated (metrics.merge_reports).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.configs.base import HardwareProfile, ModelConfig, ServingConfig, GH200
+from repro.core.types import Request
+from repro.serving.core import EngineCore, EngineStats, IterationOutcome
+from repro.serving.metrics import SLOReport, evaluate, merge_reports
+
+
+# --------------------------------------------------------------------- policy
+class RoutingPolicy:
+    name = "base"
+
+    def choose(self, replicas: Sequence[EngineCore], req: Request) -> int:
+        raise NotImplementedError
+
+
+class RoundRobin(RoutingPolicy):
+    name = "round-robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def choose(self, replicas, req):
+        idx = self._next % len(replicas)
+        self._next += 1
+        return idx
+
+
+class LeastLoaded(RoutingPolicy):
+    """Fewest requests in flight (queued + admitted); ties to lowest index."""
+    name = "least-loaded"
+
+    def choose(self, replicas, req):
+        return min(range(len(replicas)), key=lambda i: (replicas[i].load, i))
+
+
+class SLOAware(RoutingPolicy):
+    """Route where the new request's TTFT is least at risk: minimize queued
+    prefill work, weighted up when the replica's HBM pool is near-full (a
+    full pool means admission must wait on rotation transfers)."""
+    name = "slo-aware"
+
+    def choose(self, replicas, req):
+        def risk(i: int):
+            core = replicas[i]
+            free = core.kv.hbm_free_blocks
+            total = core.kv.table.num_hbm_blocks
+            pressure = 1.0 + (1.0 - free / total if total else 0.0)
+            return (core.queued_prefill_tokens() * pressure
+                    + 0.1 * len(core.active), i)
+        return min(range(len(replicas)), key=risk)
+
+
+_POLICIES = {p.name: p for p in (RoundRobin, LeastLoaded, SLOAware)}
+ROUTER_POLICIES = tuple(sorted(_POLICIES))
+
+
+def make_policy(name: str) -> RoutingPolicy:
+    try:
+        return _POLICIES[name.lower()]()
+    except KeyError:
+        raise KeyError(f"unknown router policy {name!r}; "
+                       f"known: {ROUTER_POLICIES}") from None
+
+
+# --------------------------------------------------------------------- router
+@dataclasses.dataclass
+class ReplicaReport:
+    idx: int
+    report: SLOReport
+    stats: EngineStats
+    n_routed: int
+
+
+class Router:
+    def __init__(self, cfg: ModelConfig, serving: ServingConfig,
+                 hw: HardwareProfile = GH200, *, replicas: int = 2,
+                 policy: str = "least-loaded"):
+        if replicas < 1:
+            raise ValueError("need at least one replica")
+        self.replicas: List[EngineCore] = [
+            EngineCore(cfg, serving, hw) for _ in range(replicas)]
+        self.policy = make_policy(policy)
+
+    # ------------------------------------------------------------- online API
+    def add_request(self, req: Request) -> int:
+        """Route one request; returns the chosen replica index. Replicas are
+        first advanced to the arrival time so load signals are current."""
+        self.advance_to(req.arrival_time)
+        idx = self.policy.choose(self.replicas, req)
+        self.replicas[idx].add_request(req)
+        return idx
+
+    def step(self) -> Optional[IterationOutcome]:
+        """Step the lagging replica (earliest clock with work): keeps the
+        cluster simulation causally consistent with one global timeline."""
+        live = [i for i, c in enumerate(self.replicas) if c.has_work]
+        if not live:
+            return None
+        idx = min(live, key=lambda i: (self.replicas[i].clock, i))
+        return self.replicas[idx].step()
+
+    def advance_to(self, t: float) -> None:
+        for core in self.replicas:
+            while core.has_work and core.clock < t:
+                core.step()
+
+    @property
+    def has_work(self) -> bool:
+        return any(c.has_work for c in self.replicas)
+
+    @property
+    def clock(self) -> float:
+        return max(c.clock for c in self.replicas)
+
+    def drain(self, max_time_s: float = 1e9) -> None:
+        for core in self.replicas:
+            core.drain(max_time_s)
+
+    def run(self, requests: Sequence[Request], *,
+            max_time_s: float = 1e9) -> SLOReport:
+        for r in sorted(requests, key=lambda r: r.arrival_time):
+            self.add_request(r)
+        self.drain(max_time_s)
+        return self.aggregate_report()
+
+    # ---------------------------------------------------------------- reports
+    def per_replica_reports(self) -> List[ReplicaReport]:
+        return [ReplicaReport(idx=i,
+                              report=evaluate(c.submitted,
+                                              total_time=c.clock),
+                              stats=c.stats, n_routed=len(c.submitted))
+                for i, c in enumerate(self.replicas)]
+
+    def aggregate_report(self) -> SLOReport:
+        return merge_reports([c.submitted for c in self.replicas],
+                             total_time=self.clock)
+
+    def aggregate_stats(self) -> EngineStats:
+        out = EngineStats()
+        for c in self.replicas:
+            out = out.merged_with(c.stats)
+        return out

@@ -61,7 +61,9 @@ class RotaSched(Scheduler):
 
 
 class FCFS(Scheduler):
-    """vLLM-like: passive preemption only; swapped (SF) priority on resume."""
+    """vLLM baseline: passive preemption only; swapped requests go first in
+    the candidate order but get no reservation — a waiting request that fits
+    may take the blocks a larger swapped request is still short of."""
     name = "fcfs"
 
     def schedule(self, reqs, t_now, hbm_free, block_size, b_xfer=None):
@@ -96,16 +98,22 @@ class WaitingFirst(Scheduler):
 
 
 class SwappedFirst(Scheduler):
-    """Static SF (§3.1): resume swapped before admitting waiting; no
-    proactive preemption (degrades to FCFS-like)."""
+    """Static SF (§3.1): rotary resumption has *absolute* priority. Unlike
+    FCFS, swapped requests that do not fit block the waiting queue entirely
+    (head-of-line reservation), so under contention free blocks accumulate
+    for the swap-in instead of being grabbed by newer waiting arrivals —
+    SF starves TTFT to protect TBT of rotated requests."""
     name = "sf"
 
     def schedule(self, reqs, t_now, hbm_free, block_size, b_xfer=None):
         w, s, run = _split(reqs)
-        cands = sorted(s, key=lambda r: r.arrival_time) \
-            + sorted(w, key=lambda r: r.arrival_time)
-        return ScheduleDecision(prioritized=_fit(cands, hbm_free, block_size),
-                                preempted=[])
+        s_sorted = sorted(s, key=lambda r: r.arrival_time)
+        admit = _fit(s_sorted, hbm_free, block_size)
+        budget = hbm_free - sum(r.blocks_needed(block_size) for r in admit)
+        if len(admit) == len(s_sorted):  # all swapped placed: leftover to W
+            admit = admit + _fit(sorted(w, key=lambda r: r.arrival_time),
+                                 budget, block_size)
+        return ScheduleDecision(prioritized=admit, preempted=[])
 
 
 class SJFOracle(Scheduler):

@@ -1,6 +1,8 @@
 """Two-tier block table: eager rotation life-cycle + invariants under fuzz."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.blocktable import BlockLoc, OutOfBlocks, TwoTierBlockTable

@@ -1,0 +1,130 @@
+"""Engine-core decomposition: online add_request/step API, replay parity
+with the legacy run() driver, and multi-replica router aggregation."""
+import copy
+
+import pytest
+
+from repro.configs import GH200, ServingConfig, get_config
+from repro.core.types import RequestState
+from repro.serving.engine import ServingEngine
+from repro.serving.metrics import evaluate, merge_reports
+from repro.serving.router import Router
+from repro.serving.workload import generate_requests
+
+CFG = get_config("qwen2.5-32b")
+
+
+def _sv(hbm=4000, **kw):
+    kw.setdefault("num_dram_blocks", 50000)
+    kw.setdefault("scheduler", "rotasched")
+    return ServingConfig(num_hbm_blocks=hbm, **kw)
+
+
+def _trace(rps=14, duration=10, seed=5):
+    return generate_requests("sharegpt", rps=rps, duration_s=duration,
+                             seed=seed)
+
+
+# -------------------------------------------------------------- online API
+
+def test_requests_added_mid_run_are_served():
+    eng = ServingEngine(CFG, _sv(), GH200)
+    reqs = _trace(rps=10, duration=8)
+    half = len(reqs) // 2
+    for r in reqs[:half]:
+        eng.add_request(r)
+    for _ in range(20):
+        eng.step()
+    assert eng.clock > 0
+    # late submissions land while earlier requests are still in flight
+    for r in reqs[half:]:
+        eng.add_request(r)
+    rep = eng.drain(max_time_s=300)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert rep.n == len(reqs)
+    assert rep.ttft_attainment > 0.0
+
+
+def test_step_loop_matches_run_replay():
+    """Manually stepping the online API replays bit-identically to run()."""
+    reqs_a = _trace()
+    reqs_b = copy.deepcopy(reqs_a)
+
+    eng_a = ServingEngine(CFG, _sv(hbm=2500), GH200)
+    rep_a = eng_a.run(reqs_a, max_time_s=200)
+
+    eng_b = ServingEngine(CFG, _sv(hbm=2500), GH200)
+    for r in reqs_b:
+        eng_b.add_request(r)
+    while eng_b.has_work and eng_b.clock < 200:
+        eng_b.step()
+    rep_b = evaluate(reqs_b, total_time=eng_b.clock)
+
+    assert rep_a.row() == rep_b.row()
+    assert eng_a.stats == eng_b.stats
+
+
+def test_iteration_outcomes_account_for_every_finish():
+    eng = ServingEngine(CFG, _sv(), GH200)
+    reqs = _trace(rps=8, duration=6)
+    for r in reqs:
+        eng.add_request(r)
+    finished = []
+    while eng.has_work and eng.clock < 200:
+        o = eng.step()
+        assert o.t_end >= o.t_start
+        finished.extend(o.finished)
+    assert sorted(finished) == sorted(r.req_id for r in reqs)
+
+
+def test_no_request_attribute_hack():
+    """BatchBuilder must not smuggle per-iteration state onto Request."""
+    eng = ServingEngine(CFG, _sv(hbm=2000), GH200)
+    reqs = _trace(rps=16, duration=6)
+    eng.run(reqs, max_time_s=200)
+    assert all(not hasattr(r, "_chunk") for r in reqs)
+
+
+# ------------------------------------------------------------------ router
+
+def test_router_aggregate_equals_merged_replicas():
+    reqs = _trace(rps=20, duration=10)
+    router = Router(CFG, _sv(), GH200, replicas=2, policy="least-loaded")
+    router.run(reqs, max_time_s=300)
+
+    agg = router.aggregate_report()
+    per = router.per_replica_reports()
+    merged = merge_reports([c.submitted for c in router.replicas],
+                           total_time=router.clock)
+    assert agg == merged
+    assert agg.n == sum(p.n_routed for p in per) == len(reqs)
+    assert agg.rotations == sum(p.report.rotations for p in per)
+    weighted = sum(p.report.ttft_attainment * p.report.n for p in per)
+    assert agg.ttft_attainment == pytest.approx(weighted / agg.n)
+
+
+def test_router_policies_route_everything():
+    for policy in ("round-robin", "least-loaded", "slo-aware"):
+        reqs = _trace(rps=12, duration=6)
+        router = Router(CFG, _sv(), GH200, replicas=3, policy=policy)
+        rep = router.run(reqs, max_time_s=300)
+        assert rep.n == len(reqs)
+        assert all(r.state == RequestState.FINISHED for r in reqs)
+        counts = [len(c.submitted) for c in router.replicas]
+        assert sum(counts) == len(reqs)
+        if policy == "round-robin":
+            assert max(counts) - min(counts) <= 1
+
+
+def test_two_replicas_ttft_no_worse_than_one_at_full_rps():
+    """Scale-out acceptance: 2 replicas at the same aggregate rps must hold
+    TTFT p99 at least as well as a single contended replica."""
+    single = ServingEngine(CFG, _sv(), GH200)
+    rep1 = single.run(_trace(rps=20, duration=15, seed=0), max_time_s=400)
+
+    router = Router(CFG, _sv(), GH200, replicas=2, policy="least-loaded")
+    rep2 = router.run(_trace(rps=20, duration=15, seed=0), max_time_s=400)
+
+    assert rep2.n == rep1.n
+    assert rep2.p99_ttft <= rep1.p99_ttft
+    assert rep2.ttft_attainment >= rep1.ttft_attainment

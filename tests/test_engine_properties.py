@@ -1,7 +1,9 @@
 """Property-based engine tests: conservation + SLO-metric sanity under
 randomized workloads and scheduler choices (hypothesis)."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.configs import GH200, ServingConfig, get_config

@@ -1,6 +1,8 @@
 """VLT formula + LVF (Algorithm 1) properties, incl. hypothesis fuzzing."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.configs.base import RotaSchedConfig, SLOConfig
