@@ -29,7 +29,7 @@ def serve_online(cfg, sv, reqs, replicas):
         return rep, router.aggregate_stats()
     eng = ServingEngine(cfg, sv, GH200)
     for r in sorted(reqs, key=lambda r: r.arrival_time):
-        eng.add_request(r)
+        eng.submit(r)                      # trace replay: no event buffers
     rep = eng.drain()
     return rep, eng.stats
 

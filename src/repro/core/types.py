@@ -1,9 +1,11 @@
-"""Request model + states shared by the scheduler, engine and block manager."""
+"""Request model + states shared by the scheduler, engine and block manager,
+plus the client-facing request/response types (SamplingParams, SLO classes,
+RequestOutput) the streaming API is built from (see DESIGN.md §API layer)."""
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import SLOConfig
 
@@ -17,6 +19,94 @@ class RequestState(enum.Enum):
     FINISHED = "finished"
 
 
+# Finish reasons carried on Request.finish_reason / RequestOutput.finish_reason:
+#   "length"  — generated max_tokens (oracle output_len) tokens
+#   "stop"    — real-executor mode hit an EOS / stop token (ignore_eos=False)
+#   "aborted" — client cancelled via handle.abort() / EngineCore.abort()
+FINISH_LENGTH = "length"
+FINISH_STOP = "stop"
+FINISH_ABORTED = "aborted"
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request generation controls (the client-facing knobs).
+
+    In oracle/simulation mode ``max_tokens`` doubles as the oracle decode
+    length and ``ignore_eos`` stays True (the sim emits no token ids). In
+    real-executor mode set ``ignore_eos=False`` plus ``eos_token_id`` /
+    ``stop_token_ids`` to finish with reason "stop" on an EOS hit.
+    """
+    max_tokens: int = 128
+    ignore_eos: bool = True            # oracle mode: run to max_tokens
+    eos_token_id: Optional[int] = None
+    stop_token_ids: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.max_tokens < 1:
+            raise ValueError("max_tokens must be >= 1")
+
+    def stops_on(self, token_id: int) -> bool:
+        if self.ignore_eos:
+            return False
+        return token_id == self.eos_token_id or token_id in self.stop_token_ids
+
+
+# ---------------------------------------------------------------------------
+# SLO classes: named tiers a client picks at submission time. "standard" must
+# stay equal to SLOConfig() so legacy traces are bit-identical.
+# ---------------------------------------------------------------------------
+
+SLO_CLASSES: Dict[str, SLOConfig] = {
+    "interactive": SLOConfig(ttft_s=1.0, tbt_s=0.05),   # chat-like latency
+    "standard": SLOConfig(),                             # paper defaults
+    "batch": SLOConfig(ttft_s=30.0, tbt_s=0.5),          # offline/bulk tier
+}
+
+
+def resolve_slo_class(name: str) -> SLOConfig:
+    try:
+        return SLO_CLASSES[name]
+    except KeyError:
+        raise KeyError(f"unknown SLO class {name!r}; "
+                       f"known: {sorted(SLO_CLASSES)}") from None
+
+
+_BUILTIN_SLO_CLASSES = frozenset(SLO_CLASSES)
+
+
+def register_slo_class(name: str, slo: SLOConfig) -> None:
+    """Add a named tier at runtime. The built-in tiers are immutable —
+    'standard' in particular must stay equal to SLOConfig() or legacy trace
+    replay stops being bit-identical."""
+    if name in _BUILTIN_SLO_CLASSES:
+        raise ValueError(f"cannot redefine built-in SLO class {name!r}")
+    SLO_CLASSES[name] = slo
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """One streaming event for one request: the token delta produced by a
+    single engine iteration plus live progress/latency so far.
+
+    ``token_ids`` (the cumulative generated ids, real-executor mode) is
+    materialized only on the *final* event — copying it per token would make
+    streaming O(T^2); mid-stream the live list is ``request.generated_ids``.
+    """
+    req_id: int
+    new_tokens: int                    # tokens produced this iteration
+    new_token_ids: List[int]           # their ids (real-executor mode only)
+    token_ids: List[int]               # cumulative ids (final event only)
+    tokens_generated: int              # cumulative count
+    finished: bool
+    finish_reason: Optional[str]       # "length" | "stop" | "aborted" | None
+    t: float                           # engine clock at emission
+    slo_class: str = "standard"
+    ttft_s: Optional[float] = None     # live TTFT (None before first token)
+    last_tbt_s: Optional[float] = None
+    mean_tbt_s: Optional[float] = None
+
+
 @dataclasses.dataclass
 class Request:
     req_id: int
@@ -24,8 +114,12 @@ class Request:
     prompt_len: int
     output_len: int                  # target generation length (oracle for sim)
     slo: SLOConfig = dataclasses.field(default_factory=SLOConfig)
+    slo_class: str = "standard"      # named tier the client submitted under
+    sampling: Optional[SamplingParams] = None
 
     state: RequestState = RequestState.WAITING
+    stopped: bool = False            # EOS/stop-token hit (real-executor mode)
+    finish_reason: Optional[str] = None   # "length" | "stop" | "aborted"
     prompt_ids: Optional[List[int]] = None    # real-execution mode
     generated_ids: List[int] = dataclasses.field(default_factory=list)
     tokens_generated: int = 0
@@ -48,7 +142,7 @@ class Request:
 
     @property
     def done(self) -> bool:
-        return self.tokens_generated >= self.output_len
+        return self.stopped or self.tokens_generated >= self.output_len
 
     def blocks_needed(self, block_size: int, lookahead: int = 0) -> int:
         """Blocks to hold current KV (+ lookahead new tokens)."""
@@ -71,9 +165,16 @@ class Request:
         self.state = RequestState.RUNNING
         self.t_run_start = t
 
-    def finish_at(self, t: float) -> None:
+    def finish_at(self, t: float, reason: Optional[str] = None) -> None:
         self.state = RequestState.FINISHED
         self.finish_time = t
+        if self.finish_reason is None:
+            self.finish_reason = reason or (
+                FINISH_STOP if self.stopped else FINISH_LENGTH)
+
+    @property
+    def aborted(self) -> bool:
+        return self.finish_reason == FINISH_ABORTED
 
     def record_token(self, t: float) -> None:
         self.tokens_generated += 1
@@ -81,6 +182,30 @@ class Request:
         self.t_last_token = t
         if self.t_first_token is None:
             self.t_first_token = t
+
+    # -- streaming events ----------------------------------------------------
+    def make_output(self, t: float, new_tokens: int = 0,
+                    new_token_ids: Optional[List[int]] = None
+                    ) -> RequestOutput:
+        # O(1) per event: the inter-token gaps telescope, so the mean needs
+        # no tbt_values() rebuild (which is O(tokens) and would make a
+        # T-token stream O(T^2))
+        ts = self.token_times
+        n = len(ts)
+        finished = self.state == RequestState.FINISHED
+        return RequestOutput(
+            req_id=self.req_id,
+            new_tokens=new_tokens,
+            new_token_ids=list(new_token_ids or []),
+            token_ids=list(self.generated_ids) if finished else [],
+            tokens_generated=self.tokens_generated,
+            finished=finished,
+            finish_reason=self.finish_reason,
+            t=t,
+            slo_class=self.slo_class,
+            ttft_s=self.ttft(),
+            last_tbt_s=ts[-1] - ts[-2] if n > 1 else None,
+            mean_tbt_s=(ts[-1] - ts[0]) / (n - 1) if n > 1 else None)
 
     # -- metrics -------------------------------------------------------------
     def ttft(self) -> Optional[float]:

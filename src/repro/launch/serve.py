@@ -8,6 +8,12 @@ Multi-replica serving (each replica a full engine behind the router):
 
     PYTHONPATH=src python -m repro.launch.serve --rps 20 --duration 40 \
         --replicas 2 --router slo-aware
+
+Heterogeneous SLO tiers (per-class attainment lands in the report's
+``per_class`` breakdown):
+
+    PYTHONPATH=src python -m repro.launch.serve --rps 20 --duration 40 \
+        --slo-mix interactive=0.3,standard=0.5,batch=0.2 --json
 """
 from __future__ import annotations
 
@@ -35,6 +41,10 @@ def main(argv=None):
     ap.add_argument("--router", default="least-loaded",
                     choices=list(ROUTER_POLICIES),
                     help="routing policy (used when --replicas > 1)")
+    ap.add_argument("--slo-mix", default=None, metavar="CLASS=FRAC,...",
+                    help="heterogeneous SLO classes, e.g. "
+                         "'interactive=0.3,standard=0.5,batch=0.2' "
+                         "(default: homogeneous 'standard' tier)")
     ap.add_argument("--hbm-blocks", type=int, default=4000)
     ap.add_argument("--dram-blocks", type=int, default=100000)
     ap.add_argument("--alpha", type=float, default=3.0)
@@ -54,7 +64,7 @@ def main(argv=None):
     from repro.configs import HW_PROFILES, RotaSchedConfig, ServingConfig, get_config
     from repro.serving.engine import ServingEngine
     from repro.serving.router import Router
-    from repro.serving.workload import generate_requests
+    from repro.serving.workload import generate_mixed_requests, generate_requests
 
     cfg = get_config(args.model)
     rot = RotaSchedConfig(alpha=args.alpha, beta_b=args.beta_b,
@@ -69,8 +79,13 @@ def main(argv=None):
         batched_transfer_kernel=not args.no_block_first,
         pipeline_overlap=not args.no_pipeline)
     hw = HW_PROFILES[args.hw]
-    reqs = generate_requests(args.dataset, args.rps, args.duration,
-                             seed=args.seed)
+    if args.slo_mix:
+        reqs = generate_mixed_requests(args.dataset, args.rps, args.duration,
+                                       seed=args.seed,
+                                       class_mix=args.slo_mix)
+    else:
+        reqs = generate_requests(args.dataset, args.rps, args.duration,
+                                 seed=args.seed)
 
     if args.replicas > 1:
         router = Router(cfg, sv, hw, replicas=args.replicas,
@@ -86,7 +101,10 @@ def main(argv=None):
                active_rotations=stats.active_rotations,
                passive_preemptions=stats.passive_preemptions,
                eager_blocks=stats.eager_blocks,
+               aborted=stats.aborted,
                stall_time=round(stats.stall_time, 3))
+    if args.slo_mix:
+        row.update(slo_mix=args.slo_mix)
     if args.replicas > 1:
         row.update(replicas=args.replicas, router=args.router,
                    per_replica=[
@@ -97,8 +115,15 @@ def main(argv=None):
     if args.json:
         print(json.dumps(row, indent=1))
     else:
+        per_class = row.pop("per_class", {})
         for k, v in row.items():
             print(f"{k:22s} {v}")
+        for name, c in per_class.items():
+            print(f"  [{name:12s}] n={c['n']:4d} "
+                  f"ttft_att={c['ttft_attainment']:.3f} "
+                  f"tbt_att={c['tbt_attainment']:.3f} "
+                  f"p99_ttft={c['p99_ttft']:.3f}")
+        row["per_class"] = per_class
     return row
 
 

@@ -20,14 +20,16 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import (HardwareProfile, ModelConfig, ServingConfig,
-                                GH200)
+                                SLOConfig, GH200)
 from repro.core.blocktable import OutOfBlocks
 from repro.core.duplexkv import DuplexKV
-from repro.core.types import Request, RequestState
+from repro.core.types import (FINISH_ABORTED, Request, RequestOutput,
+                              RequestState, SamplingParams, resolve_slo_class)
 from repro.serving.executor import BatchPlan, SimExecutor
+from repro.serving.outputs import OutputCollector, RequestHandle
 from repro.serving.schedulers import Scheduler, make_scheduler
 
 
@@ -41,6 +43,7 @@ class EngineStats:
     active_rotations: int = 0
     eager_blocks: int = 0
     dropped: int = 0
+    aborted: int = 0                   # client cancellations (abort API)
 
     def merged_with(self, other: "EngineStats") -> "EngineStats":
         return EngineStats(*(a + b for a, b in
@@ -69,6 +72,8 @@ class IterationOutcome:
     resumed: List[int] = dataclasses.field(default_factory=list)    # S -> R
     preempted: List[int] = dataclasses.field(default_factory=list)  # R -> S
     finished: List[int] = dataclasses.field(default_factory=list)
+    # streaming events: one per request that produced tokens or finished
+    outputs: List[RequestOutput] = dataclasses.field(default_factory=list)
 
 
 class AdmissionController:
@@ -210,13 +215,101 @@ class EngineCore:
         self._pending: List[Tuple[float, int, Request]] = []   # arrival heap
         self._seq = itertools.count()
         self.submitted: List[Request] = []     # every request ever added
+        self._index: Dict[int, Request] = {}   # req_id -> live request (O(1))
+        self._next_req_id = 0                  # auto ids for add_request()
+        self.collector = OutputCollector()
 
     # ------------------------------------------------------------- online API
-    def add_request(self, req: Request) -> None:
-        """Enqueue a request; it enters the engine once ``clock`` reaches its
-        ``arrival_time`` (requests with past arrival times enter next step)."""
+    def add_request(self, prompt_len: Optional[int] = None, *,
+                    prompt_ids: Optional[Sequence[int]] = None,
+                    sampling_params: Optional[SamplingParams] = None,
+                    slo_class: str = "standard",
+                    slo: Optional[SLOConfig] = None,
+                    arrival_time: Optional[float] = None,
+                    req_id: Optional[int] = None) -> RequestHandle:
+        """Public submission entry: build a Request from client-facing params
+        and return a streaming ``RequestHandle``.
+
+        Exactly one of ``prompt_len`` (oracle/sim mode) or ``prompt_ids``
+        (real-executor mode) is required. ``arrival_time`` defaults to the
+        engine's current clock (i.e. "now"); ``slo`` overrides the tier the
+        ``slo_class`` name resolves to. Passing a pre-built ``Request`` as
+        the first argument is the legacy path and delegates to ``submit``
+        (no streaming attachment — replay callers never consume events).
+        """
+        if isinstance(prompt_len, Request):      # legacy Request-object path
+            return self.submit(prompt_len)
+        if (prompt_len is None) == (prompt_ids is None):
+            raise ValueError("pass exactly one of prompt_len or prompt_ids")
+        if prompt_ids is not None:
+            prompt_ids = [int(x) for x in prompt_ids]
+            prompt_len = len(prompt_ids)
+        if prompt_len < 1:
+            raise ValueError("prompt must be non-empty")
+        sp = sampling_params or SamplingParams()
+        tier = resolve_slo_class(slo_class)   # validate even under override
+        req = Request(
+            req_id=self._next_req_id if req_id is None else req_id,
+            arrival_time=self.clock if arrival_time is None else arrival_time,
+            prompt_len=prompt_len,
+            output_len=sp.max_tokens,
+            slo=slo or tier,
+            slo_class=slo_class,
+            sampling=sp,
+            prompt_ids=prompt_ids)
+        return self.submit(req, make_handle=True)
+
+    def submit(self, req: Request, *, make_handle: bool = False
+               ) -> RequestHandle:
+        """Internal/legacy constructor path: enqueue a pre-built Request; it
+        enters the engine once ``clock`` reaches its ``arrival_time``
+        (requests with past arrival times enter next step). Streaming
+        delivery only attaches with ``make_handle=True`` (the new-style
+        ``add_request`` path) — trace replay must not accumulate event
+        buffers nobody consumes."""
+        if req.req_id in self._index:
+            raise ValueError(f"duplicate req_id {req.req_id}")
         heapq.heappush(self._pending, (req.arrival_time, next(self._seq), req))
         self.submitted.append(req)
+        self._index[req.req_id] = req
+        self._next_req_id = max(self._next_req_id, req.req_id + 1)
+        handle = RequestHandle(req, pump=self._pump, abort_fn=self.abort)
+        if make_handle:
+            self.collector.attach(handle)
+        return handle
+
+    def abort(self, req_id: int) -> bool:
+        """Cancel a request: free its HBM/DRAM blocks, cancel any pending
+        swap-in, and drop it from the pending/active sets. Safe in any
+        non-finished state; returns False if unknown or already finished.
+        The final streaming event carries ``finish_reason == "aborted"``."""
+        r = self._index.get(req_id)
+        if r is None or r.state == RequestState.FINISHED:
+            return False
+        if any(a.req_id == req_id for a in self.active):
+            self.active = [a for a in self.active if a.req_id != req_id]
+        else:                          # still on the arrival heap
+            self._pending = [(t, s, q) for (t, s, q) in self._pending
+                             if q.req_id != req_id]
+            heapq.heapify(self._pending)
+        # frees HBM and DRAM residency in one go; a ROTARY request with a
+        # swap-in scheduled for the next iteration simply never reaches the
+        # scheduler again (the swap-in is cancelled by removal from `active`)
+        self.kv.finish(req_id)
+        if self.real is not None:
+            self.real.drop(req_id)
+        r.finish_at(self.clock, reason=FINISH_ABORTED)
+        del self._index[req_id]
+        self.stats.aborted += 1
+        self.collector.dispatch([r.make_output(self.clock)])
+        return True
+
+    def _pump(self) -> bool:
+        """Advance one iteration on behalf of a streaming handle."""
+        if not self.has_work:
+            return False
+        self.step()
+        return True
 
     @property
     def has_work(self) -> bool:
@@ -297,6 +390,15 @@ class EngineCore:
                 self.admission.complete_swap_in(r, self.clock)
                 resumed.append(rid)
 
+        new_count: Dict[int, int] = {}        # req_id -> tokens this iter
+        new_ids: Dict[int, List[int]] = {}    # req_id -> their ids (real mode)
+
+        def emit_token(r: Request, tok: int) -> None:
+            r.generated_ids.append(tok)
+            new_ids.setdefault(r.req_id, []).append(tok)
+            if r.sampling is not None and r.sampling.stops_on(tok):
+                r.stopped = True
+
         for rid, take in plan.prefill_chunks:
             r = self._by_id(rid)
             if r is None:
@@ -304,11 +406,11 @@ class EngineCore:
             r.prefill_pos += take
             if r.prefill_done and r.tokens_generated == 0:
                 if self.real is not None and r.prompt_ids is not None:
-                    tok = self.real.prefill(
+                    emit_token(r, self.real.prefill(
                         r.req_id, r.prompt_ids,
-                        capacity=r.prompt_len + r.output_len + 1)
-                    r.generated_ids.append(tok)
+                        capacity=r.prompt_len + r.output_len + 1))
                 r.record_token(self.clock)    # first token at prefill tail
+                new_count[rid] = new_count.get(rid, 0) + 1
             self.kv.sync_progress(r.req_id, r.prefill_pos)
 
         for rid in plan.decode_reqs:
@@ -316,35 +418,48 @@ class EngineCore:
             if r is None or r.state != RequestState.RUNNING:
                 continue
             if self.real is not None and r.generated_ids:
-                tok = self.real.decode(r.req_id, r.generated_ids[-1],
-                                       r.total_len - 1)
-                r.generated_ids.append(tok)
+                emit_token(r, self.real.decode(r.req_id, r.generated_ids[-1],
+                                               r.total_len - 1))
             r.record_token(self.clock)
+            new_count[rid] = new_count.get(rid, 0) + 1
             self.kv.sync_progress(r.req_id, r.total_len)
 
         finished: List[int] = []
         for r in self.active:
             if r.done and r.state != RequestState.FINISHED:
-                r.finish_at(self.clock)
+                r.finish_at(self.clock)   # reason: "stop" if EOS else "length"
                 self.kv.finish(r.req_id)
                 if self.real is not None:
                     self.real.drop(r.req_id)
                 finished.append(r.req_id)
+                new_count.setdefault(r.req_id, 0)
+
+        outputs = [r.make_output(self.clock, new_count[r.req_id],
+                                 new_ids.get(r.req_id))
+                   for r in self.active if r.req_id in new_count]
+        self.collector.dispatch(outputs)
+        for rid in finished:
+            self._index.pop(rid, None)
         self.active = [r for r in self.active
                        if r.state != RequestState.FINISHED]
 
         return IterationOutcome(
             t_start=t, t_end=self.clock, exec_s=exec_s, transfer_s=tr_s,
-            plan=plan, admitted=admitted,
-            resumed=resumed, preempted=adm.preempt_ids, finished=finished)
+            plan=plan, admitted=admitted, resumed=resumed,
+            preempted=adm.preempt_ids, finished=finished, outputs=outputs)
 
     # ------------------------------------------------------------------ utils
     def _ingest(self, t: float) -> None:
         while self._pending and self._pending[0][0] <= t:
             self.active.append(heapq.heappop(self._pending)[2])
 
+    def is_live(self, req_id: int) -> bool:
+        """True while the request is pending or active (not finished or
+        aborted) — the router's owner-map pruning predicate."""
+        return req_id in self._index
+
     def _by_id(self, rid: int) -> Optional[Request]:
-        for r in self.active:
-            if r.req_id == rid:
-                return r
-        return None
+        """O(1) live-request lookup (hot path: every decode req, every
+        iteration). The index spans pending+active; entries leave on
+        finish/abort, so a stale rid from an earlier iteration misses."""
+        return self._index.get(rid)

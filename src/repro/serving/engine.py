@@ -22,14 +22,16 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 from repro.configs.base import (HardwareProfile, ModelConfig, ServingConfig,
-                                GH200)
-from repro.core.types import Request
+                                SLOConfig, GH200)
+from repro.core.types import Request, SamplingParams
 from repro.serving.core import EngineCore, EngineStats, IterationOutcome
 from repro.serving.executor import SimExecutor
 from repro.serving.metrics import SLOReport, evaluate
+from repro.serving.outputs import RequestHandle
 from repro.serving.schedulers import Scheduler
 
-__all__ = ["ServingEngine", "EngineStats", "EngineCore", "IterationOutcome"]
+__all__ = ["ServingEngine", "EngineStats", "EngineCore", "IterationOutcome",
+           "RequestHandle"]
 
 
 class ServingEngine:
@@ -79,10 +81,31 @@ class ServingEngine:
         return self.core.clock
 
     # ------------------------------------------------------------- online API
-    def add_request(self, req: Request) -> None:
-        """Submit a request; served once the engine clock reaches its
-        arrival time. May be called between ``step()`` calls."""
-        self.core.add_request(req)
+    def add_request(self, prompt_len=None, *,
+                    prompt_ids: Optional[Sequence[int]] = None,
+                    sampling_params: Optional[SamplingParams] = None,
+                    slo_class: str = "standard",
+                    slo: Optional[SLOConfig] = None,
+                    arrival_time: Optional[float] = None) -> RequestHandle:
+        """Submit a request from client-facing parameters and return a
+        streaming ``RequestHandle`` (see EngineCore.add_request). A pre-built
+        ``Request`` as the first argument takes the legacy path. May be
+        called between ``step()`` calls; the request is served once the
+        engine clock reaches its arrival time."""
+        return self.core.add_request(
+            prompt_len, prompt_ids=prompt_ids,
+            sampling_params=sampling_params, slo_class=slo_class, slo=slo,
+            arrival_time=arrival_time)
+
+    def submit(self, req: Request, *, make_handle: bool = False
+               ) -> RequestHandle:
+        """Legacy/internal path: enqueue a pre-built oracle ``Request``.
+        Pass ``make_handle=True`` to also attach streaming delivery."""
+        return self.core.submit(req, make_handle=make_handle)
+
+    def abort(self, req_id: int) -> bool:
+        """Cancel a request, freeing its KV blocks (any non-finished state)."""
+        return self.core.abort(req_id)
 
     def step(self) -> IterationOutcome:
         """Run one engine iteration (see EngineCore.step)."""
@@ -103,8 +126,9 @@ class ServingEngine:
     # ------------------------------------------------------- batch-replay API
     def run(self, requests: Sequence[Request], *,
             max_time_s: float = 1e9) -> SLOReport:
-        """Compatibility driver: submit a whole trace, replay to completion."""
+        """Compatibility driver: submit a whole trace, replay to completion.
+        No handles are attached, so no event buffers accumulate."""
         for r in requests:
-            self.core.add_request(r)
+            self.core.submit(r)
         self.core.drain(max_time_s)
         return evaluate(requests, total_time=self.core.clock)

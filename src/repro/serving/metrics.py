@@ -1,5 +1,18 @@
 """SLO attainment and latency metrics (paper §5.1: attainment rate = % of
-requests meeting the TTFT / TBT thresholds)."""
+requests meeting the TTFT / TBT thresholds).
+
+Accounting rules (see DESIGN.md §API layer):
+
+* A request that never produced a token counts as a **miss** for both TTFT
+  and TBT attainment (it is in the denominator but can satisfy neither SLO);
+  ``n_no_token`` makes that population explicit.
+* **Aborted** requests (client cancellations, ``finish_reason=="aborted"``)
+  are excluded from attainment denominators — a cancelled request is not an
+  SLO violation — and reported via ``n_aborted``. Their generated tokens
+  still count toward throughput (they consumed capacity).
+* ``per_class`` breaks attainment down by the named SLO class each request
+  was submitted under (heterogeneous-tier traces, ``--slo-mix``).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -17,6 +30,18 @@ def percentile(vals: Sequence[float], p: float) -> float:
 
 
 @dataclasses.dataclass
+class ClassReport:
+    """Attainment breakdown for one SLO class."""
+    n: int
+    n_aborted: int
+    n_no_token: int
+    ttft_attainment: float
+    tbt_attainment: float
+    p50_ttft: float
+    p99_ttft: float
+
+
+@dataclasses.dataclass
 class SLOReport:
     n: int
     ttft_attainment: float
@@ -29,8 +54,11 @@ class SLOReport:
     throughput_tok_s: float
     total_time_s: float
     rotations: int
+    n_aborted: int = 0
+    n_no_token: int = 0
+    per_class: Dict[str, ClassReport] = dataclasses.field(default_factory=dict)
 
-    def row(self) -> Dict[str, float]:
+    def row(self) -> Dict[str, object]:
         return dataclasses.asdict(self)
 
 
@@ -46,20 +74,41 @@ def merge_reports(groups: Sequence[Sequence[Request]],
     return evaluate([r for g in groups for r in g], total_time=total_time)
 
 
-def evaluate(requests: Sequence[Request], *, total_time: float) -> SLOReport:
-    done = [r for r in requests if r.t_first_token is not None]
+def _attainment(requests: Sequence[Request]):
+    """(live, done, ttft_ok, tbt_ok) with aborts excluded from `live`."""
+    live = [r for r in requests if not r.aborted]
+    done = [r for r in live if r.t_first_token is not None]
     ttft_ok = [r for r in done if r.ttft_ok()]
-    # TBT attainment: a request attains its TBT SLO if its max TBT is within
-    # the threshold (per-request accounting, like the paper)
     tbt_ok = [r for r in done if r.tbt_ok()]
+    return live, done, ttft_ok, tbt_ok
+
+
+def evaluate(requests: Sequence[Request], *, total_time: float) -> SLOReport:
+    live, done, ttft_ok, tbt_ok = _attainment(requests)
+    # TBT attainment: a request attains its TBT SLO if its mean TBT is within
+    # the threshold (per-request accounting, like the paper); requests that
+    # never produced a token can satisfy neither SLO and count as misses.
     ttfts = [r.ttft() for r in done]
     tbts = [v for r in done for v in r.tbt_values()]
     toks = sum(r.tokens_generated for r in requests)
-    n = len(requests)
+    n_live = len(live)
+    per_class: Dict[str, ClassReport] = {}
+    for name in sorted({r.slo_class for r in requests}):
+        sub = [r for r in requests if r.slo_class == name]
+        s_live, s_done, s_ttft_ok, s_tbt_ok = _attainment(sub)
+        s_ttfts = [r.ttft() for r in s_done]
+        per_class[name] = ClassReport(
+            n=len(sub),
+            n_aborted=len(sub) - len(s_live),
+            n_no_token=len(s_live) - len(s_done),
+            ttft_attainment=len(s_ttft_ok) / len(s_live) if s_live else 0.0,
+            tbt_attainment=len(s_tbt_ok) / len(s_live) if s_live else 0.0,
+            p50_ttft=percentile(s_ttfts, 50),
+            p99_ttft=percentile(s_ttfts, 99))
     return SLOReport(
-        n=n,
-        ttft_attainment=len(ttft_ok) / n if n else 0.0,
-        tbt_attainment=len(tbt_ok) / n if n else 0.0,
+        n=len(requests),
+        ttft_attainment=len(ttft_ok) / n_live if n_live else 0.0,
+        tbt_attainment=len(tbt_ok) / n_live if n_live else 0.0,
         p50_ttft=percentile(ttfts, 50),
         p99_ttft=percentile(ttfts, 99),
         p50_tbt=percentile(tbts, 50),
@@ -68,4 +117,6 @@ def evaluate(requests: Sequence[Request], *, total_time: float) -> SLOReport:
         throughput_tok_s=toks / total_time if total_time else 0.0,
         total_time_s=total_time,
         rotations=sum(r.rotations for r in requests),
-    )
+        n_aborted=len(requests) - n_live,
+        n_no_token=n_live - len(done),
+        per_class=per_class)

@@ -1,0 +1,163 @@
+"""Client-facing output plumbing: RequestHandle + OutputCollector.
+
+``EngineCore.add_request(...)`` returns a ``RequestHandle``; every
+``EngineCore.step()`` pushes that iteration's ``RequestOutput`` events
+through the engine's ``OutputCollector`` to the owning handles. A handle is
+a *pull* surface: ``stream()`` pumps the engine (or the router, for
+cluster-level handles) whenever its buffer runs dry, so a single-threaded
+caller can interleave token consumption with engine progress:
+
+    h = engine.add_request(prompt_len=512,
+                           sampling_params=SamplingParams(max_tokens=64),
+                           slo_class="interactive")
+    for out in h.stream():
+        ...                    # out.new_tokens arrived this iteration
+    print(h.metrics())
+
+Handles attached to a Router pump the whole cluster (lagging-replica order),
+so two handles on different replicas can be consumed concurrently from one
+thread. ``abort()`` cancels mid-stream; the final event then carries
+``finish_reason == "aborted"``.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Callable, Deque, Dict, Iterator, List, Optional
+
+from repro.core.types import Request, RequestOutput, RequestState
+
+# Pump: advance the engine/cluster by one iteration; False = no work left.
+Pump = Callable[[], bool]
+AbortFn = Callable[[int], bool]
+
+
+class RequestHandle:
+    """Live view of one submitted request (see DESIGN.md §API layer)."""
+
+    def __init__(self, request: Request, pump: Pump, abort_fn: AbortFn):
+        self.request = request
+        self._pump = pump
+        self._abort = abort_fn
+        self._buf: Deque[RequestOutput] = collections.deque()
+        self._final: Optional[RequestOutput] = None
+
+    # -- identity ------------------------------------------------------------
+    @property
+    def req_id(self) -> int:
+        return self.request.req_id
+
+    @property
+    def slo_class(self) -> str:
+        return self.request.slo_class
+
+    @property
+    def finished(self) -> bool:
+        # detached handles (legacy submit without streaming) never receive
+        # the final event; fall back to the request's own state
+        return (self._final is not None
+                or self.request.state == RequestState.FINISHED)
+
+    # -- event delivery (called by OutputCollector) --------------------------
+    def _push(self, out: RequestOutput) -> None:
+        self._buf.append(out)
+        if out.finished:
+            self._final = out
+
+    def bind_pump(self, pump: Pump) -> None:
+        """Re-bind who advances the world (Router-owned handles pump the
+        cluster, not a single replica)."""
+        self._pump = pump
+
+    def bind_abort(self, abort_fn: AbortFn) -> None:
+        """Re-bind the abort target (Router-owned handles must go through
+        ``Router.abort`` so the cluster's owner map stays consistent)."""
+        self._abort = abort_fn
+
+    # -- consumption ---------------------------------------------------------
+    def events(self) -> List[RequestOutput]:
+        """Drain buffered events without advancing the engine (poll mode,
+        for consuming several handles from one driver loop)."""
+        out = list(self._buf)
+        self._buf.clear()
+        return out
+
+    def stream(self) -> Iterator[RequestOutput]:
+        """Yield output events until the request finishes, stepping the
+        engine whenever no event is buffered."""
+        while True:
+            while self._buf:
+                yield self._buf.popleft()
+            if self.finished:
+                return
+            if not self._pump():
+                # engine drained without finishing us — only possible if the
+                # request was never going to run (e.g. aborted elsewhere)
+                return
+
+    def result(self) -> RequestOutput:
+        """Block (step the engine) until finished; return the final event.
+        Buffered intermediate events stay readable via ``events()``."""
+        while not self.finished:
+            if not self._pump():
+                raise RuntimeError(
+                    f"engine ran out of work before request {self.req_id} "
+                    f"finished (state={self.request.state.value})")
+        if self._final is None:     # detached handle: synthesize the summary
+            self._final = self.request.make_output(
+                self.request.finish_time or 0.0)
+        return self._final
+
+    def abort(self) -> bool:
+        """Cancel this request; frees its HBM/DRAM blocks immediately.
+        Returns False if it already finished."""
+        return self._abort(self.req_id)
+
+    # -- metrics -------------------------------------------------------------
+    def metrics(self) -> Dict[str, object]:
+        r = self.request
+        tbts = r.tbt_values()
+        return dict(
+            req_id=r.req_id,
+            state=r.state.value,
+            slo_class=r.slo_class,
+            finish_reason=r.finish_reason,
+            tokens_generated=r.tokens_generated,
+            rotations=r.rotations,
+            ttft_s=r.ttft(),
+            mean_tbt_s=sum(tbts) / len(tbts) if tbts else None,
+            max_tbt_s=max(tbts) if tbts else None,
+            ttft_ok=r.ttft_ok(),
+            tbt_ok=r.tbt_ok(),
+        )
+
+    def __repr__(self) -> str:
+        return (f"RequestHandle(req_id={self.req_id}, "
+                f"state={self.request.state.value}, "
+                f"tokens={self.request.tokens_generated}, "
+                f"slo_class={self.slo_class!r})")
+
+
+class OutputCollector:
+    """Routes per-iteration RequestOutput events to registered handles.
+
+    Requests submitted without a handle (legacy ``run(trace)`` replay) have
+    no entry here, so replay accumulates no event buffers.
+    """
+
+    def __init__(self):
+        self._handles: Dict[int, RequestHandle] = {}
+
+    def attach(self, handle: RequestHandle) -> None:
+        self._handles[handle.req_id] = handle
+
+    def get(self, req_id: int) -> Optional[RequestHandle]:
+        return self._handles.get(req_id)
+
+    def dispatch(self, outputs: List[RequestOutput]) -> None:
+        for out in outputs:
+            h = self._handles.get(out.req_id)
+            if h is None:
+                continue
+            h._push(out)
+            if out.finished:
+                del self._handles[out.req_id]

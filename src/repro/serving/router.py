@@ -18,12 +18,14 @@ per-replica and aggregated (metrics.merge_reports).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
-from repro.configs.base import HardwareProfile, ModelConfig, ServingConfig, GH200
-from repro.core.types import Request
+from repro.configs.base import (HardwareProfile, ModelConfig, ServingConfig,
+                                SLOConfig, GH200)
+from repro.core.types import Request, SamplingParams
 from repro.serving.core import EngineCore, EngineStats, IterationOutcome
 from repro.serving.metrics import SLOReport, evaluate, merge_reports
+from repro.serving.outputs import RequestHandle
 
 
 # --------------------------------------------------------------------- policy
@@ -101,15 +103,64 @@ class Router:
         self.replicas: List[EngineCore] = [
             EngineCore(cfg, serving, hw) for _ in range(replicas)]
         self.policy = make_policy(policy)
+        self._owner: Dict[int, int] = {}   # req_id -> replica index
+        self._next_req_id = 0              # cluster-unique ids (handle path)
 
     # ------------------------------------------------------------- online API
-    def add_request(self, req: Request) -> int:
-        """Route one request; returns the chosen replica index. Replicas are
-        first advanced to the arrival time so load signals are current."""
-        self.advance_to(req.arrival_time)
-        idx = self.policy.choose(self.replicas, req)
-        self.replicas[idx].add_request(req)
-        return idx
+    def add_request(self, prompt_len=None, *,
+                    prompt_ids: Optional[Sequence[int]] = None,
+                    sampling_params: Optional[SamplingParams] = None,
+                    slo_class: str = "standard",
+                    slo: Optional[SLOConfig] = None,
+                    arrival_time: Optional[float] = None):
+        """Route one request to a replica.
+
+        New-style (client-facing params) returns a ``RequestHandle`` whose
+        pump advances the *cluster* (lagging-replica order), with a
+        cluster-unique req_id; ``handle.abort()`` is forwarded to the owning
+        replica. The legacy path (a pre-built ``Request`` as the first
+        argument) keeps returning the chosen replica index. Replicas are
+        first advanced to the arrival time so load signals are current.
+        """
+        if isinstance(prompt_len, Request):          # legacy trace-replay path
+            req = prompt_len
+            if req.req_id in self._owner:
+                raise ValueError(f"duplicate req_id {req.req_id} across the "
+                                 f"cluster")
+            self.advance_to(req.arrival_time)
+            idx = self.policy.choose(self.replicas, req)
+            self.replicas[idx].submit(req)
+            self._owner[req.req_id] = idx
+            self._next_req_id = max(self._next_req_id, req.req_id + 1)
+            return idx
+        t = self.clock if arrival_time is None else arrival_time
+        self.advance_to(t)
+        probe = Request(req_id=-1, arrival_time=t,
+                        prompt_len=(len(prompt_ids) if prompt_ids is not None
+                                    else int(prompt_len or 1)),
+                        output_len=(sampling_params or SamplingParams()
+                                    ).max_tokens)
+        idx = self.policy.choose(self.replicas, probe)
+        rid = self._next_req_id
+        self._next_req_id += 1
+        handle = self.replicas[idx].add_request(
+            prompt_len, prompt_ids=prompt_ids,
+            sampling_params=sampling_params, slo_class=slo_class, slo=slo,
+            arrival_time=t, req_id=rid)
+        self._owner[rid] = idx
+        handle.bind_pump(self._pump)
+        handle.bind_abort(self.abort)   # keep the owner map consistent
+        return handle
+
+    def abort(self, req_id: int) -> bool:
+        """Forward an abort to the replica that owns the request."""
+        idx = self._owner.pop(req_id, None)
+        if idx is None:
+            return False
+        return self.replicas[idx].abort(req_id)
+
+    def _pump(self) -> bool:
+        return self.step() is not None
 
     def step(self) -> Optional[IterationOutcome]:
         """Step the lagging replica (earliest clock with work): keeps the
@@ -118,12 +169,16 @@ class Router:
         if not live:
             return None
         idx = min(live, key=lambda i: (self.replicas[i].clock, i))
-        return self.replicas[idx].step()
+        out = self.replicas[idx].step()
+        for rid in out.finished:       # keep the owner map bounded by live
+            self._owner.pop(rid, None)
+        return out
 
     def advance_to(self, t: float) -> None:
         for core in self.replicas:
             while core.has_work and core.clock < t:
-                core.step()
+                for rid in core.step().finished:
+                    self._owner.pop(rid, None)
 
     @property
     def has_work(self) -> bool:
@@ -136,6 +191,9 @@ class Router:
     def drain(self, max_time_s: float = 1e9) -> None:
         for core in self.replicas:
             core.drain(max_time_s)
+        # this path bypasses Router.step's per-finish pruning
+        self._owner = {rid: idx for rid, idx in self._owner.items()
+                       if self.replicas[idx].is_live(rid)}
 
     def run(self, requests: Sequence[Request], *,
             max_time_s: float = 1e9) -> SLOReport:

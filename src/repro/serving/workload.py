@@ -3,16 +3,23 @@
 ShareGPT / LMSYS-Chat-1M length statistics are modeled as clipped lognormals
 fit to the published distributions (no network access in this environment);
 all draws are seeded and deterministic.
+
+Every generated request carries client-facing ``SamplingParams`` (oracle
+mode: ``max_tokens`` = drawn output length, ``ignore_eos=True``) and an SLO
+class name. ``generate_mixed_requests`` produces heterogeneous tiers
+(interactive / standard / batch) over the *same* arrival/length draws as the
+homogeneous trace, so mixes are comparable run-to-run.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.configs.base import SLOConfig
-from repro.core.types import Request
+from repro.core.types import (Request, SamplingParams, SLO_CLASSES,
+                              resolve_slo_class)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,7 +45,8 @@ DATASETS = {d.name: d for d in (SHAREGPT, LMSYS)}
 
 
 def generate_requests(dataset: str, rps: float, duration_s: float,
-                      seed: int = 0, slo: SLOConfig = SLOConfig()) -> List[Request]:
+                      seed: int = 0, slo: Optional[SLOConfig] = None,
+                      slo_class: str = "standard") -> List[Request]:
     prof = DATASETS[dataset]
     rng = np.random.default_rng(seed)
     n = max(int(rps * duration_s), 1)
@@ -48,7 +56,70 @@ def generate_requests(dataset: str, rps: float, duration_s: float,
                       prof.max_in).astype(int)
     out_lens = np.clip(rng.lognormal(prof.out_mu, prof.out_sigma, n), 4,
                        prof.max_out).astype(int)
+    if slo is None:
+        slo = resolve_slo_class(slo_class)
     return [Request(req_id=i, arrival_time=float(arrivals[i]),
                     prompt_len=int(in_lens[i]), output_len=int(out_lens[i]),
-                    slo=slo)
+                    slo=slo, slo_class=slo_class,
+                    sampling=SamplingParams(max_tokens=int(out_lens[i]),
+                                            ignore_eos=True))
             for i in range(n)]
+
+
+def parse_class_mix(spec: str) -> Dict[str, float]:
+    """Parse "interactive=0.3,standard=0.5,batch=0.2" into a weight map.
+
+    Weights are normalized; every class name must be registered in
+    ``SLO_CLASSES``.
+    """
+    mix: Dict[str, float] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, sep, frac = part.partition("=")
+        name, frac = name.strip(), frac.strip()
+        if sep and not frac:
+            raise ValueError(f"missing weight after '=': {part!r}")
+        resolve_slo_class(name)   # raises on unknown class
+        if name in mix:
+            raise ValueError(f"duplicate SLO class in mix: {name!r}")
+        weight = float(frac) if frac else 1.0
+        if weight <= 0:
+            raise ValueError(f"SLO class weight must be positive: "
+                             f"{name}={weight}")
+        mix[name] = weight
+    if not mix:
+        raise ValueError(f"empty SLO class mix: {spec!r}")
+    total = sum(mix.values())
+    return {k: v / total for k, v in mix.items()}
+
+
+def generate_mixed_requests(dataset: str, rps: float, duration_s: float,
+                            seed: int = 0,
+                            class_mix: "Dict[str, float] | str" =
+                            "interactive=0.3,standard=0.5,batch=0.2"
+                            ) -> List[Request]:
+    """Heterogeneous-SLO trace: same arrivals/lengths as the homogeneous
+    trace at this seed; each request is assigned a named SLO class drawn
+    from ``class_mix`` by an independent seeded stream."""
+    if isinstance(class_mix, str):
+        class_mix = parse_class_mix(class_mix)
+    else:                              # dict path: same per-entry contract
+        for name, weight in class_mix.items():
+            resolve_slo_class(name)    # raises on unknown class
+            if weight <= 0:
+                raise ValueError(f"SLO class weight must be positive: "
+                                 f"{name}={weight}")
+        total = sum(class_mix.values())
+        class_mix = {k: v / total for k, v in class_mix.items()}
+    reqs = generate_requests(dataset, rps, duration_s, seed=seed)
+    names = sorted(class_mix)          # deterministic order
+    probs = [class_mix[k] for k in names]
+    rng = np.random.default_rng([seed, 0xC1A55])   # independent stream
+    picks = rng.choice(len(names), size=len(reqs), p=probs)
+    for r, k in zip(reqs, picks):
+        name = names[int(k)]
+        r.slo_class = name
+        r.slo = SLO_CLASSES[name]
+    return reqs

@@ -1,0 +1,389 @@
+"""Client-facing request API: SamplingParams / SLO classes / RequestHandle
+streaming, abort semantics in every lifecycle state, per-class metrics, and
+bit-identical legacy run(trace) replay (golden values captured from PR 1)."""
+import pytest
+
+from repro.configs import GH200, RotaSchedConfig, ServingConfig, SLOConfig, get_config
+from repro.core.types import (Request, RequestState, SamplingParams,
+                              SLO_CLASSES, resolve_slo_class)
+from repro.serving.engine import ServingEngine
+from repro.serving.metrics import evaluate
+from repro.serving.router import Router
+from repro.serving.workload import (generate_mixed_requests,
+                                    generate_requests, parse_class_mix)
+
+CFG = get_config("qwen2.5-32b")
+
+
+def _sv(hbm=2000, **kw):
+    kw.setdefault("num_dram_blocks", 20000)
+    kw.setdefault("scheduler", "rotasched")
+    return ServingConfig(num_hbm_blocks=hbm, **kw)
+
+
+def _engine(hbm=2000, **kw):
+    return ServingEngine(CFG, _sv(hbm, **kw), GH200)
+
+
+# ----------------------------------------------------------- submission API
+
+def test_add_request_returns_streaming_handle():
+    eng = _engine()
+    h = eng.add_request(prompt_len=256,
+                        sampling_params=SamplingParams(max_tokens=16),
+                        slo_class="interactive")
+    assert h.request.slo == SLO_CLASSES["interactive"]
+    events = list(h.stream())
+    assert sum(e.new_tokens for e in events) == 16
+    assert events[-1].finished and events[-1].finish_reason == "length"
+    assert events[-1].slo_class == "interactive"
+    # live latency telemetry rides on every event
+    assert all(e.ttft_s is not None for e in events)
+    m = h.metrics()
+    assert m["tokens_generated"] == 16 and m["finish_reason"] == "length"
+
+
+def test_result_blocks_until_finished():
+    eng = _engine()
+    h = eng.add_request(prompt_len=128,
+                        sampling_params=SamplingParams(max_tokens=4))
+    final = h.result()
+    assert final.finished and final.tokens_generated == 4
+    assert h.request.state == RequestState.FINISHED
+
+
+def test_add_request_validation():
+    eng = _engine()
+    with pytest.raises(ValueError):
+        eng.add_request()                       # neither prompt_len nor ids
+    with pytest.raises(ValueError):
+        eng.add_request(prompt_len=8, prompt_ids=[1, 2])   # both
+    with pytest.raises(KeyError):
+        eng.add_request(prompt_len=8, slo_class="no-such-tier")
+    with pytest.raises(KeyError):               # validated even under override
+        eng.add_request(prompt_len=8, slo=SLOConfig(ttft_s=2.0),
+                        slo_class="interactiv")
+    with pytest.raises(ValueError):
+        SamplingParams(max_tokens=0)
+
+
+def test_detached_legacy_handle_still_reports_result():
+    """submit() without streaming returns a detached handle whose
+    finished/result() fall back to the request's own state."""
+    eng = _engine()
+    h = eng.submit(Request(req_id=0, arrival_time=0.0, prompt_len=64,
+                           output_len=4))
+    assert not h.finished
+    eng.drain()
+    assert h.finished                 # no events delivered, state fallback
+    assert h.events() == []
+    assert h.result().finish_reason == "length"
+    assert h.metrics()["tokens_generated"] == 4
+
+
+def test_slo_class_registry():
+    assert resolve_slo_class("standard") == SLOConfig()
+    assert resolve_slo_class("interactive").ttft_s < SLOConfig().ttft_s
+    assert resolve_slo_class("batch").ttft_s > SLOConfig().ttft_s
+    with pytest.raises(KeyError):
+        resolve_slo_class("gold-plated")
+    with pytest.raises(ValueError):   # built-ins are immutable (replay parity)
+        from repro.core.types import register_slo_class
+        register_slo_class("standard", SLOConfig(ttft_s=2.0))
+
+
+def test_mixed_requests_dict_path_validated():
+    with pytest.raises(KeyError):
+        generate_mixed_requests("sharegpt", rps=5, duration_s=2,
+                                class_mix={"interactive": 0.5, "premium": 0.5})
+    with pytest.raises(ValueError):
+        generate_mixed_requests("sharegpt", rps=5, duration_s=2,
+                                class_mix={"interactive": -1.0,
+                                           "standard": 2.0})
+
+
+def test_prompt_ids_submission_sets_prompt_len():
+    eng = _engine()
+    h = eng.add_request(prompt_ids=[3, 1, 4, 1, 5, 9, 2, 6],
+                        sampling_params=SamplingParams(max_tokens=2))
+    assert h.request.prompt_len == 8
+    h.result()
+    assert h.request.tokens_generated == 2
+
+
+# ----------------------------------------------------------------- aborts
+
+def test_abort_while_waiting_pending():
+    """Abort before the request ever enters the engine: no blocks touched."""
+    eng = _engine()
+    hbm0 = eng.kv.hbm_free_blocks
+    h = eng.add_request(prompt_len=64, arrival_time=100.0,
+                        sampling_params=SamplingParams(max_tokens=8))
+    assert h.abort() is True
+    assert h.finished and h.request.finish_reason == "aborted"
+    assert eng.kv.hbm_free_blocks == hbm0
+    assert not eng.has_work                  # removed from the arrival heap
+    assert eng.stats.aborted == 1
+    assert h.abort() is False                # double-abort is a no-op
+
+
+def test_abort_while_running_restores_hbm_free_blocks():
+    eng = _engine()
+    hbm0 = eng.kv.hbm_free_blocks
+    h = eng.add_request(prompt_len=512,
+                        sampling_params=SamplingParams(max_tokens=64))
+    # step until it holds HBM blocks and is mid-decode
+    while h.request.tokens_generated < 3:
+        eng.step()
+    assert h.request.state == RequestState.RUNNING
+    assert eng.kv.hbm_free_blocks < hbm0
+    assert h.abort() is True
+    assert eng.kv.hbm_free_blocks == hbm0
+    eng.core.kv.table.check_invariants()
+    final = h.events()[-1]
+    assert final.finished and final.finish_reason == "aborted"
+
+
+def _force_rotary_engine():
+    """Small HBM pool + an interactive burst: the long batch-tier 'victim'
+    request gets rotated out (KV to DRAM) to protect the burst's TTFT."""
+    eng = ServingEngine(CFG, _sv(hbm=60, num_dram_blocks=4000,
+                                 prefill_chunk=128), GH200)
+    victim = eng.add_request(prompt_len=512, slo_class="batch",
+                             sampling_params=SamplingParams(max_tokens=300))
+    burst = [eng.add_request(prompt_len=256, arrival_time=0.3,
+                             slo_class="interactive",
+                             sampling_params=SamplingParams(max_tokens=16))
+             for _ in range(6)]
+    for _ in range(500):
+        eng.step()
+        if victim.request.state == RequestState.ROTARY:
+            return eng, victim, burst
+    pytest.skip("no rotation triggered at this configuration")
+
+
+def test_abort_while_rotary_frees_dram_and_cancels_swap_in():
+    eng, victim, burst = _force_rotary_engine()
+    table = eng.core.kv.table
+    held_dram = sum(1 for b in table.blocks_of(victim.req_id)
+                    if b.dram_slot is not None)
+    assert held_dram > 0                     # its KV really lives in DRAM
+    dram0 = table.dram_free
+    assert victim.abort() is True
+    # its DRAM residency is back in the pool; no dangling block entries
+    assert table.dram_free == dram0 + held_dram
+    assert table.blocks_of(victim.req_id) == []
+    table.check_invariants()
+    # the pending swap-in is cancelled: the engine never schedules the
+    # aborted request again and the burst still finishes
+    eng.drain(max_time_s=500)
+    assert victim.request.finish_reason == "aborted"
+    for h in burst:
+        assert h.request.state == RequestState.FINISHED
+        assert h.request.finish_reason == "length"
+    # every block returned: pool is full again
+    assert eng.kv.hbm_free_blocks == 60
+
+
+def test_abort_counted_but_not_an_slo_miss():
+    eng = _engine()
+    keep = eng.add_request(prompt_len=64,
+                           sampling_params=SamplingParams(max_tokens=8))
+    drop = eng.add_request(prompt_len=64, arrival_time=50.0,
+                           sampling_params=SamplingParams(max_tokens=8))
+    drop.abort()
+    keep.result()
+    rep = eng.report()
+    assert rep.n == 2 and rep.n_aborted == 1
+    assert rep.ttft_attainment == 1.0        # aborted req not a miss
+    assert eng.stats.aborted == 1
+
+
+# ------------------------------------------------------------- EOS / stop
+
+class _FakeRealExecutor:
+    """Deterministic stand-in for RealExecutor: always emits `token`."""
+
+    def __init__(self, token=7):
+        self.token = token
+        self.dropped = []
+
+    def prefill(self, req_id, tokens, capacity):
+        return self.token
+
+    def decode(self, req_id, token, cache_len):
+        return self.token
+
+    def swap_out(self, req_id):
+        pass
+
+    def swap_in(self, req_id):
+        pass
+
+    def drop(self, req_id):
+        self.dropped.append(req_id)
+
+
+def test_eos_stop_finishes_with_reason_stop():
+    fake = _FakeRealExecutor(token=7)
+    eng = ServingEngine(CFG, _sv(), GH200, real_executor=fake)
+    h = eng.add_request(prompt_ids=list(range(1, 17)),
+                        sampling_params=SamplingParams(
+                            max_tokens=64, ignore_eos=False, eos_token_id=7))
+    final = h.result()
+    assert final.finish_reason == "stop"
+    assert h.request.tokens_generated == 1      # EOS was the first token
+    assert final.token_ids == [7]
+    assert h.req_id in fake.dropped
+
+
+def test_ignore_eos_runs_to_max_tokens():
+    fake = _FakeRealExecutor(token=7)
+    eng = ServingEngine(CFG, _sv(), GH200, real_executor=fake)
+    h = eng.add_request(prompt_ids=list(range(1, 17)),
+                        sampling_params=SamplingParams(
+                            max_tokens=5, ignore_eos=True, eos_token_id=7))
+    final = h.result()
+    assert final.finish_reason == "length"
+    assert final.token_ids == [7] * 5
+
+
+# ----------------------------------------------------------------- metrics
+
+def test_evaluate_counts_no_token_requests_as_misses():
+    ok = Request(req_id=0, arrival_time=0.0, prompt_len=8, output_len=2)
+    ok.record_token(0.1)
+    silent = Request(req_id=1, arrival_time=0.0, prompt_len=8, output_len=2)
+    rep = evaluate([ok, silent], total_time=1.0)
+    assert rep.n == 2 and rep.n_no_token == 1
+    assert rep.ttft_attainment == 0.5        # the silent request is a miss
+    assert rep.tbt_attainment == 0.5
+
+
+def test_evaluate_per_class_breakdown():
+    reqs = []
+    for i, (cls, tok_at) in enumerate([("interactive", 0.1),
+                                       ("interactive", 5.0),
+                                       ("batch", 5.0)]):
+        r = Request(req_id=i, arrival_time=0.0, prompt_len=8, output_len=1,
+                    slo=SLO_CLASSES[cls], slo_class=cls)
+        r.record_token(tok_at)
+        reqs.append(r)
+    aborted = Request(req_id=9, arrival_time=0.0, prompt_len=8, output_len=1,
+                      slo=SLO_CLASSES["batch"], slo_class="batch")
+    aborted.finish_at(0.5, reason="aborted")
+    reqs.append(aborted)
+    rep = evaluate(reqs, total_time=10.0)
+    assert set(rep.per_class) == {"interactive", "batch"}
+    inter, batch = rep.per_class["interactive"], rep.per_class["batch"]
+    assert inter.n == 2 and inter.ttft_attainment == 0.5   # 5s > 1s tier SLO
+    assert batch.n == 2 and batch.n_aborted == 1
+    assert batch.ttft_attainment == 1.0      # 5s within 30s tier, abort excl.
+    assert rep.n_aborted == 1
+
+
+def test_mixed_trace_same_arrivals_and_lengths():
+    base = generate_requests("sharegpt", rps=10, duration_s=5, seed=3)
+    mixed = generate_mixed_requests("sharegpt", rps=10, duration_s=5, seed=3)
+    assert len(base) == len(mixed)
+    assert [r.arrival_time for r in base] == [r.arrival_time for r in mixed]
+    assert [r.prompt_len for r in base] == [r.prompt_len for r in mixed]
+    assert len({r.slo_class for r in mixed}) > 1
+    for r in mixed:
+        assert r.slo == SLO_CLASSES[r.slo_class]
+        assert r.sampling.max_tokens == r.output_len
+
+
+def test_parse_class_mix():
+    mix = parse_class_mix("interactive=1,batch=3")
+    assert mix == {"interactive": 0.25, "batch": 0.75}
+    with pytest.raises(KeyError):
+        parse_class_mix("interactive=1,platinum=2")
+    with pytest.raises(ValueError):
+        parse_class_mix("")
+    with pytest.raises(ValueError):   # per-entry check, not just the total
+        parse_class_mix("interactive=-0.5,standard=1.5")
+    with pytest.raises(ValueError):   # duplicates are a spec typo, not a merge
+        parse_class_mix("interactive=0.2,interactive=0.3,batch=0.5")
+    with pytest.raises(ValueError):   # '=' with the weight deleted is a typo
+        parse_class_mix("interactive=,standard=1")
+    assert parse_class_mix("interactive,batch") == \
+        {"interactive": 0.5, "batch": 0.5}   # bare names: equal weights
+
+
+# ------------------------------------------------------------------ router
+
+def test_router_handles_stream_and_abort_forwarding():
+    router = Router(CFG, _sv(), GH200, replicas=2, policy="round-robin")
+    h1 = router.add_request(prompt_len=256,
+                            sampling_params=SamplingParams(max_tokens=16),
+                            slo_class="interactive")
+    h2 = router.add_request(prompt_len=256,
+                            sampling_params=SamplingParams(max_tokens=200),
+                            slo_class="batch")
+    assert router._owner[h1.req_id] != router._owner[h2.req_id]
+    final = h1.result()                      # pumps the whole cluster
+    assert final.finish_reason == "length"
+    assert h2.abort() is True                # routed through Router.abort
+    assert h2.request.finish_reason == "aborted"
+    assert h2.req_id not in router._owner    # owner map pruned on abort
+    assert router.aggregate_stats().aborted == 1
+    router.drain()
+    for core in router.replicas:
+        assert core.kv.hbm_free_blocks == core.kv.table.num_hbm_blocks
+
+
+def test_router_rejects_cluster_req_id_collision():
+    """A legacy Request whose id collides with a handle's cluster id would
+    silently repoint _owner and misroute aborts — must be rejected."""
+    router = Router(CFG, _sv(), GH200, replicas=2, policy="round-robin")
+    h = router.add_request(prompt_len=64,
+                           sampling_params=SamplingParams(max_tokens=4))
+    with pytest.raises(ValueError):
+        router.add_request(Request(req_id=h.req_id, arrival_time=0.0,
+                                   prompt_len=8, output_len=2))
+    h.result()
+    assert h.req_id not in router._owner     # owner map pruned on finish
+
+
+# ---------------------------------------------------- legacy replay parity
+
+# Golden SLOReport of the legacy run(trace) driver, captured at PR 1
+# (pre-API-redesign HEAD): sharegpt, seed 0, rps 20, duration 10,
+# qwen2.5-32b, serve.py's default engine config. Every shared field must
+# stay bit-identical — floats compared exactly, no tolerance.
+_GOLDEN_PR1 = {
+    "n": 200,
+    "ttft_attainment": 1.0,
+    "tbt_attainment": 1.0,
+    "p50_ttft": 0.07106629294746247,
+    "p99_ttft": 0.3495841457778218,
+    "p50_tbt": 0.022127912960000273,
+    "p99_tbt": 0.07787664184075815,
+    "mean_tbt": 0.028406540108555506,
+    "throughput_tok_s": 1306.7410706432238,
+    "total_time_s": 30.602083992290844,
+    "rotations": 0,
+}
+_GOLDEN_PR1_STATS = dict(iterations=1259, exec_time=30.5680873970924,
+                         passive_preemptions=0, active_rotations=0,
+                         eager_blocks=5127)
+
+
+def test_legacy_run_replay_bit_identical_to_pr1_golden():
+    cfg = get_config("qwen2.5-32b")
+    rot = RotaSchedConfig(alpha=3.0, beta_b=0.0, beta_f=0.5, b_xfer=2400)
+    sv = ServingConfig(num_hbm_blocks=4000, num_dram_blocks=100000,
+                       scheduler="rotasched", rotary=rot, auto_b_xfer=True)
+    reqs = generate_requests("sharegpt", 20.0, 10.0, seed=0)
+    eng = ServingEngine(cfg, sv, GH200)
+    rep = eng.run(reqs)
+    row = rep.row()
+    for key, want in _GOLDEN_PR1.items():
+        assert row[key] == want, f"{key}: {row[key]!r} != golden {want!r}"
+    for key, want in _GOLDEN_PR1_STATS.items():
+        assert getattr(eng.stats, key) == want
+    # new accounting fields are inert on an abort-free homogeneous trace
+    assert rep.n_aborted == 0 and rep.n_no_token == 0
+    assert set(rep.per_class) == {"standard"}
+    assert rep.per_class["standard"].ttft_attainment == rep.ttft_attainment
