@@ -1,0 +1,81 @@
+"""Two-tier prefix cache: TTFT p99 + executed prefill tokens vs share ratio.
+
+For each prefix-share ratio the same shared-prefix trace (real prompt token
+ids, deterministic per seed) is served twice — cache off (exclusive-ownership
+baseline) and cache on (content-addressed ref-counted blocks with DRAM-tier
+demotion). With sharing, the cache must execute measurably fewer prefill
+tokens and hold TTFT p99 no worse; at share 0.0 both runs should coincide
+(no hits to exploit).
+
+    PYTHONPATH=src python -m benchmarks.bench_prefix_cache [--quick]
+
+CSV columns: share,cache,prefill_tokens_executed,prefill_tokens_saved,
+hit_rate,p99_ttft,ttft_attainment,demoted,dram_hits.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs import GH200, ServingConfig, get_config
+from repro.serving.engine import ServingEngine
+from repro.serving.workload import generate_shared_prefix_requests
+
+from benchmarks.common import MODEL_SETUP, QUICK
+
+MODEL = "qwen2.5-32b"
+RPS = 14
+DURATION = 8.0 if QUICK else 20.0
+SHARES = (0.0, 0.5) if QUICK else (0.0, 0.25, 0.5, 0.75)
+
+
+def run_case(share: float, cache_on: bool) -> dict:
+    hbm, _ = MODEL_SETUP[MODEL]
+    sv = ServingConfig(num_hbm_blocks=hbm, num_dram_blocks=100000,
+                       scheduler="rotasched", prefix_cache=cache_on)
+    reqs = generate_shared_prefix_requests(
+        "sharegpt", rps=RPS, duration_s=DURATION, seed=1,
+        share_ratio=share, prefix_len=256, n_prefixes=8)
+    eng = ServingEngine(get_config(MODEL), sv, GH200)
+    rep = eng.run(reqs, max_time_s=30 * DURATION)
+    c = eng.kv.cache_counters()
+    return dict(share=share, cache=int(cache_on),
+                prefill_tokens_executed=eng.stats.prefill_tokens,
+                prefill_tokens_saved=rep.prefill_tokens_saved,
+                hit_rate=rep.prefix_hit_rate,
+                p99_ttft=rep.p99_ttft,
+                ttft_attainment=rep.ttft_attainment,
+                demoted=c["demoted_blocks"],
+                dram_hits=c["dram_hit_blocks"])
+
+
+def main() -> None:
+    print("share,cache,prefill_tokens_executed,prefill_tokens_saved,"
+          "hit_rate,p99_ttft,ttft_attainment,demoted,dram_hits")
+    for share in SHARES:
+        rows = {}
+        for cache_on in (False, True):
+            t0 = time.time()
+            row = run_case(share, cache_on)
+            rows[cache_on] = row
+            print(f"{row['share']},{row['cache']},"
+                  f"{row['prefill_tokens_executed']},"
+                  f"{row['prefill_tokens_saved']},{row['hit_rate']:.4f},"
+                  f"{row['p99_ttft']:.4f},{row['ttft_attainment']:.4f},"
+                  f"{row['demoted']},{row['dram_hits']}  "
+                  f"# {time.time()-t0:.0f}s", flush=True)
+        if share > 0:
+            on, off = rows[True], rows[False]
+            saved = off["prefill_tokens_executed"] \
+                - on["prefill_tokens_executed"]
+            assert saved > 0, \
+                f"cache saved no prefill work at share={share}: {on} vs {off}"
+            assert on["p99_ttft"] <= off["p99_ttft"] * 1.001, \
+                f"cache regressed TTFT p99 at share={share}: " \
+                f"{on['p99_ttft']} > {off['p99_ttft']}"
+            print(f"# share={share}: {saved} prefill tokens saved, "
+                  f"p99_ttft {off['p99_ttft']:.4f} -> {on['p99_ttft']:.4f}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

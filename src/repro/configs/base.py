@@ -375,6 +375,10 @@ class ServingConfig:
     duplex: bool = True
     pipeline_overlap: bool = True         # cross-iteration pipeline
     max_model_len: int = 8192
+    # Two-tier prefix cache (ref-counted, content-addressed KV blocks with
+    # DRAM-tier demotion through DuplexKV). Default off: replay bit-identical
+    # to the exclusive-ownership engine. See DESIGN.md §Two-tier prefix cache.
+    prefix_cache: bool = False
 
 
 # ---------------------------------------------------------------------------

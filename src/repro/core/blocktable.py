@@ -1,4 +1,5 @@
-"""Two-tier (HBM + DRAM) paged KV block table with eager block rotation.
+"""Two-tier (HBM + DRAM) paged KV block table with eager block rotation and
+a content-addressed, ref-counted prefix cache.
 
 Block life-cycle (paper §4.3.2):
 
@@ -10,12 +11,36 @@ Block life-cycle (paper §4.3.2):
               of an untouched block is again free — eager rotation doubles as
               an incremental host-side backup, used for fault tolerance)
 
+Prefix cache (extension beyond the paper, see DESIGN.md §Two-tier prefix
+cache): blocks are reference-counted (``Block.ref_ids``) instead of
+exclusively owned. Full prompt blocks get a chained content hash
+``h_i = hash((h_{i-1}, token_ids_of_block_i))``; a hash index maps prefix
+hashes to live blocks so a new request with the same prompt prefix increfs
+the existing blocks instead of re-prefilling (``match_prefix``). Releasing a
+request decrefs; at refcount 0 a content-addressed block is *retained* in an
+LRU cache rather than freed. The superchip twist: cold cached HBM blocks are
+demoted to the DRAM tier through the eager D2H path (they are ``synced`` and
+unreferenced, so ``eager_candidates`` copies them host-side for free), and a
+later hit on a DRAM-tier entry swaps the block back in over NVLink-C2C
+instead of re-prefilling. Cache lifecycle:
+
+  CACHED_HBM --eager D2H--> CACHED_BOTH --HBM pressure--> CACHED_DRAM
+  CACHED_DRAM --prefix hit--> promoted H2D (BOTH, refcount > 0)
+  CACHED_DRAM --DRAM pressure--> evicted (slots recycled, hash unindexed)
+
+With ``prefix_cache=False`` (the default) every path below reduces exactly
+to the pre-cache behaviour: blocks carry a single reference, releases free
+immediately, and no hash/LRU state is touched — replay is bit-identical.
+
 Data-race-freedom invariant (checked): an HBM slot never serves simultaneously
-as a swap-in destination and a swap-out source — swap-in destinations come
-from the free pool, swap-out sources are freed only on transfer completion.
+as a swap-in destination and a swap-out source — swap-in/promotion
+destinations come from the free pool (or a completed eviction), swap-out
+sources are freed only on transfer completion. Cache traffic preserves it:
+eviction/demotion only touches refcount-0 blocks with no transfer in flight.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import enum
 from typing import Dict, List, Optional, Sequence, Set, Tuple
@@ -30,14 +55,20 @@ class BlockLoc(enum.Enum):
 @dataclasses.dataclass
 class Block:
     block_id: int
-    req_id: int
-    index: int                 # position in the request's block list
+    index: int                 # position in the (shared) prefix / block list
     loc: BlockLoc
-    synced: bool = False       # fully written (immutable until req finishes)
+    ref_ids: Set[int] = dataclasses.field(default_factory=set)
+    synced: bool = False       # fully written (immutable until released)
+    hash: Optional[int] = None  # chained content hash (full prompt blocks)
+    last_used: int = 0         # LRU tick (refcount-0 cache ordering)
     hbm_slot: Optional[int] = None
     dram_slot: Optional[int] = None
     d2h_inflight: bool = False
     h2d_inflight: bool = False
+
+    @property
+    def ref_count(self) -> int:
+        return len(self.ref_ids)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,12 +76,26 @@ class TransferDesc:
     """One block move; ``segments`` is the number of contiguous regions the
     layout imposes (layer-first: N_layers segments; block-first: 1)."""
     block_id: int
-    req_id: int
+    req_id: int                # first referencing request, or -1 (cache move)
     direction: str             # "d2h" | "h2d"
     src_slot: int
     dst_slot: int
     nbytes: int
     segments: int
+
+
+@dataclasses.dataclass
+class KVView:
+    """Per-iteration residency snapshot handed to the scheduler so its block
+    accounting shrinks by the cached/shared share (prefix-cache mode only).
+
+    ``resident``   req_id -> HBM-resident blocks already held (WAITING with
+                   cache hits, ROTARY whose shared prefix stayed on-device);
+    ``releasable`` req_id -> blocks a preemption would actually free
+                   (exclusively referenced, HBM-resident).
+    """
+    resident: Dict[int, int] = dataclasses.field(default_factory=dict)
+    releasable: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 class OutOfBlocks(RuntimeError):
@@ -59,9 +104,11 @@ class OutOfBlocks(RuntimeError):
 
 class TwoTierBlockTable:
     def __init__(self, num_hbm_blocks: int, num_dram_blocks: int,
-                 block_bytes: int, segments_per_block: int):
+                 block_bytes: int, segments_per_block: int,
+                 prefix_cache: bool = False):
         self.block_bytes = block_bytes
         self.segments_per_block = segments_per_block
+        self.prefix_cache = prefix_cache
         self._hbm_free: List[int] = list(range(num_hbm_blocks - 1, -1, -1))
         self._dram_free: List[int] = list(range(num_dram_blocks - 1, -1, -1))
         self._blocks: Dict[int, Block] = {}
@@ -69,20 +116,42 @@ class TwoTierBlockTable:
         self._next_id = 0
         self.num_hbm_blocks = num_hbm_blocks
         self.num_dram_blocks = num_dram_blocks
+        # content-addressed cache state (inert when prefix_cache is False)
+        self._hash_index: Dict[int, int] = {}          # prefix hash -> block
+        self._cached_lru: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()                  # refcount-0 retained
+        self._tick = 0
+        self._mut = 0                  # bumped on cache-membership mutations
+        self._evict_memo: Tuple[int, int] = (-1, 0)    # (mut, evictable)
         # stats
         self.eager_d2h_blocks = 0
         self.preempt_d2h_blocks = 0
         self.preempt_free_blocks = 0
         self.swapin_h2d_blocks = 0
+        # cache stats
+        self.cache_hit_blocks = 0
+        self.cache_hit_tokens = 0
+        self.dram_hit_blocks = 0       # hits served by promoting a DRAM entry
+        self.cow_blocks = 0            # copy-on-write forks of partial tails
+        self.retained_blocks = 0       # releases that entered the cache
+        self.demoted_blocks = 0        # cached HBM copies dropped (kept DRAM)
+        self.evicted_blocks = 0        # cached blocks fully evicted
 
     # -- capacity -------------------------------------------------------------
     @property
     def hbm_free(self) -> int:
-        return len(self._hbm_free)
+        """Allocatable HBM blocks: the free pool plus refcount-0 cached
+        blocks that can be evicted on demand (the budget admission sees)."""
+        return len(self._hbm_free) + self._evictable_hbm()
 
     @property
     def dram_free(self) -> int:
         return len(self._dram_free)
+
+    @property
+    def cached_blocks(self) -> int:
+        """Refcount-0 blocks currently retained by the prefix cache."""
+        return len(self._cached_lru)
 
     def blocks_of(self, req_id: int) -> List[Block]:
         return [self._blocks[b] for b in self._by_req.get(req_id, [])]
@@ -91,15 +160,30 @@ class TwoTierBlockTable:
         return sum(1 for b in self.blocks_of(req_id)
                    if b.loc in (BlockLoc.HBM, BlockLoc.BOTH))
 
+    def releasable_hbm_blocks_of(self, req_id: int) -> int:
+        """HBM blocks a preemption of this request would actually free
+        (exclusively referenced; shared prefix blocks stay resident)."""
+        return sum(1 for b in self.blocks_of(req_id)
+                   if b.ref_count == 1
+                   and b.loc in (BlockLoc.HBM, BlockLoc.BOTH))
+
     # -- allocation -----------------------------------------------------------
-    def alloc_hbm(self, req_id: int, n: int) -> List[Block]:
-        if len(self._hbm_free) < n:
-            raise OutOfBlocks(f"need {n} HBM blocks, have {len(self._hbm_free)}")
+    def alloc(self, req_id: int, n: int) -> List[Block]:
+        """Allocate ``n`` fresh exclusively-referenced blocks (refcount 1),
+        evicting cold refcount-0 cache entries if the free pool runs short."""
+        evictable = self._evictable_hbm()
+        if len(self._hbm_free) + evictable < n:
+            raise OutOfBlocks(
+                f"need {n} HBM blocks, have {len(self._hbm_free)}"
+                + (f" free + {evictable} evictable" if evictable else ""))
         out = []
         lst = self._by_req.setdefault(req_id, [])
         for _ in range(n):
-            b = Block(self._next_id, req_id, len(lst), BlockLoc.HBM,
-                      hbm_slot=self._hbm_free.pop())
+            slot = self._take_hbm_slot()
+            if slot is None:       # capacity raced away (should not happen)
+                raise OutOfBlocks(f"HBM eviction failed mid-alloc for {req_id}")
+            b = Block(self._next_id, len(lst), BlockLoc.HBM,
+                      ref_ids={req_id}, hbm_slot=slot)
             self._next_id += 1
             self._blocks[b.block_id] = b
             lst.append(b.block_id)
@@ -111,18 +195,220 @@ class TwoTierBlockTable:
         for bid in self._by_req.get(req_id, [])[:upto_index]:
             self._blocks[bid].synced = True
 
+    # -- content-addressed prefix cache ---------------------------------------
+    def match_prefix(self, req_id: int, chain: Sequence[int],
+                     max_tokens: int, block_size: int
+                     ) -> Tuple[int, List[TransferDesc]]:
+        """Lookup-then-incref: walk the chained prefix hashes, sharing each
+        hit block with ``req_id``. DRAM-tier hits are promoted (H2D
+        descriptors returned for the caller to execute); a hit whose tail the
+        request will overwrite is forked copy-on-write. Returns
+        ``(cached_tokens, promotion_descs)``; stops at the first miss."""
+        if not self.prefix_cache or req_id in self._by_req:
+            return 0, []
+        promos: List[TransferDesc] = []
+        cached_tokens = 0
+        for i, h in enumerate(chain):
+            bid = self._hash_index.get(h)
+            if bid is None:
+                break
+            b = self._blocks.get(bid)
+            if b is None or not b.synced:
+                break
+            if (i + 1) * block_size > max_tokens:
+                # the request overwrites this block's tail (its prompt ends
+                # exactly on a block boundary and the last prompt token must
+                # be recomputed for first-token logits): copy-on-write
+                nb = self._cow_block(req_id, b, index=i)
+                if nb is None:
+                    break
+                cached_tokens = max_tokens
+                self.cow_blocks += 1
+                self.cache_hit_blocks += 1
+                break
+            if b.loc == BlockLoc.DRAM and not b.h2d_inflight:
+                # DRAM-tier hit: swap the cached block back in over the
+                # NVLink-C2C link instead of re-prefilling it. The eviction
+                # that funds the promotion must not consume any block of
+                # this chain's own remaining prefix.
+                own = {self._hash_index[g] for g in chain[i:]
+                       if g in self._hash_index}
+                slot = self._take_hbm_slot(exclude=own)
+                if slot is None:
+                    break
+                b.hbm_slot = slot
+                b.h2d_inflight = True
+                promos.append(self._desc(b, "h2d"))
+                self.dram_hit_blocks += 1
+            self._ref_block(req_id, b)
+            self.cache_hit_blocks += 1
+            cached_tokens = (i + 1) * block_size
+        if cached_tokens:
+            self.cache_hit_tokens += cached_tokens
+        return cached_tokens, promos
+
+    def register_hashes(self, req_id: int, chain: Sequence[int],
+                        upto_blocks: int) -> None:
+        """Content-address the request's fully written prompt blocks so later
+        requests with the same prefix can share them."""
+        if not self.prefix_cache:
+            return
+        ids = self._by_req.get(req_id, [])
+        for i in range(min(upto_blocks, len(chain), len(ids))):
+            b = self._blocks[ids[i]]
+            if b.hash is None:
+                b.hash = chain[i]
+            self._hash_index.setdefault(chain[i], b.block_id)
+
+    def complete_promotion(self, block_id: int) -> None:
+        """A DRAM-tier cache hit's H2D landed: block resident in both tiers."""
+        b = self._blocks.get(block_id)
+        if b is None:
+            return
+        b.h2d_inflight = False
+        if b.loc == BlockLoc.DRAM and b.hbm_slot is not None:
+            b.loc = BlockLoc.BOTH
+        self._mut += 1
+
+    def _ref_block(self, req_id: int, b: Block) -> None:
+        if not b.ref_ids:                    # leaving the refcount-0 cache
+            self._cached_lru.pop(b.block_id, None)
+            self._mut += 1
+        b.ref_ids.add(req_id)
+        self._touch(b)
+        self._by_req.setdefault(req_id, []).append(b.block_id)
+
+    def _cow_block(self, req_id: int, src: Block, index: int
+                   ) -> Optional[Block]:
+        """Fork a shared block whose tail this request will overwrite. The
+        copy is an intra-HBM D2D move (negligible next to the C2C link), so
+        only the slot cost is modeled."""
+        if src.loc not in (BlockLoc.HBM, BlockLoc.BOTH) or src.h2d_inflight:
+            return None                      # DRAM-tier tail: not worth a CoW
+        self._touch(src)                     # keep the source off the LRU head
+        slot = self._take_hbm_slot(exclude={src.block_id})
+        if slot is None:
+            return None
+        b = Block(self._next_id, index, BlockLoc.HBM,
+                  ref_ids={req_id}, hbm_slot=slot)
+        self._next_id += 1
+        self._blocks[b.block_id] = b
+        self._by_req.setdefault(req_id, []).append(b.block_id)
+        self._touch(b)
+        return b
+
+    # -- cache eviction / demotion --------------------------------------------
+    def _evictable_hbm(self) -> int:
+        """Refcount-0 cached blocks whose HBM slot could be reclaimed now.
+        Memoized on the mutation counter — ``hbm_free`` is read several
+        times per engine iteration (scheduler, admission, router policies)
+        and the cache LRU grows for the whole run, so the O(#cached) scan
+        must not run per read. ``check_invariants`` cross-checks the memo
+        against a fresh scan (guards a missed ``_mut`` bump)."""
+        if not self.prefix_cache or not self._cached_lru:
+            return 0
+        if self._evict_memo[0] != self._mut:
+            n = sum(1 for bid in self._cached_lru
+                    if self._blocks[bid].loc in (BlockLoc.HBM, BlockLoc.BOTH)
+                    and not self._blocks[bid].d2h_inflight
+                    and not self._blocks[bid].h2d_inflight)
+            self._evict_memo = (self._mut, n)
+        return self._evict_memo[1]
+
+    def _take_hbm_slot(self, exclude: Set[int] = frozenset()
+                       ) -> Optional[int]:
+        if self._hbm_free:
+            return self._hbm_free.pop()
+        if self._evict_hbm_block(exclude):
+            return self._hbm_free.pop()
+        return None
+
+    def _evict_hbm_block(self, exclude: Set[int] = frozenset()) -> bool:
+        """Free one HBM slot from the refcount-0 cache, LRU order. Entries
+        already demoted host-side (BOTH) are preferred — dropping their HBM
+        copy is free, which is exactly what eager demotion buys."""
+        if not self.prefix_cache:
+            return False
+        for want_both in (True, False):
+            for bid in list(self._cached_lru):
+                b = self._blocks[bid]
+                if (bid in exclude or b.d2h_inflight or b.h2d_inflight):
+                    continue
+                if want_both and b.loc == BlockLoc.BOTH:
+                    self._release_hbm(b)
+                    b.loc = BlockLoc.DRAM
+                    self.demoted_blocks += 1
+                    self._mut += 1
+                    return True
+                if not want_both and b.loc == BlockLoc.HBM:
+                    self._release_hbm(b)
+                    self._drop_cached(b)
+                    self.evicted_blocks += 1
+                    return True
+        return False
+
+    def _take_dram_slot(self) -> Optional[int]:
+        if self._dram_free:
+            return self._dram_free.pop()
+        if self._evict_dram_block():
+            return self._dram_free.pop()
+        return None
+
+    def _evict_dram_block(self) -> bool:
+        """Free one DRAM slot from the cache: DRAM-only entries first (they
+        die entirely), then BOTH entries (which keep their HBM copy)."""
+        if not self.prefix_cache:
+            return False
+        for dram_only in (True, False):
+            for bid in list(self._cached_lru):
+                b = self._blocks[bid]
+                if b.d2h_inflight or b.h2d_inflight:
+                    continue
+                if dram_only and b.loc == BlockLoc.DRAM:
+                    self._drop_cached(b)
+                    self.evicted_blocks += 1
+                    return True
+                if not dram_only and b.loc == BlockLoc.BOTH:
+                    self._dram_free.append(b.dram_slot)
+                    b.dram_slot = None
+                    b.loc = BlockLoc.HBM
+                    self._mut += 1
+                    return True
+        return False
+
+    def _drop_cached(self, b: Block) -> None:
+        """Fully evict a refcount-0 cached block (slots recycled by caller
+        for HBM; DRAM slot returned here)."""
+        self._cached_lru.pop(b.block_id, None)
+        self._mut += 1
+        if b.hash is not None and self._hash_index.get(b.hash) == b.block_id:
+            del self._hash_index[b.hash]
+        if b.dram_slot is not None and b.loc in (BlockLoc.DRAM, BlockLoc.BOTH):
+            self._dram_free.append(b.dram_slot)
+        self._blocks.pop(b.block_id, None)
+
+    def _touch(self, b: Block) -> None:
+        self._tick += 1
+        b.last_used = self._tick
+        if b.block_id in self._cached_lru:
+            self._cached_lru.move_to_end(b.block_id)
+
     # -- eager rotation ---------------------------------------------------------
     def eager_candidates(self, limit: int,
                          exclude_reqs: Set[int] = frozenset()) -> List[TransferDesc]:
-        """Synced HBM-only blocks to copy to DRAM in the background."""
+        """Synced HBM-only blocks to copy to DRAM in the background. With the
+        prefix cache on, refcount-0 cached HBM entries qualify too — this is
+        the demotion path that makes their later eviction free."""
         descs = []
         for b in self._blocks.values():
             if len(descs) >= limit or not self._dram_free:
                 break
             if (b.loc == BlockLoc.HBM and b.synced and not b.d2h_inflight
-                    and b.req_id not in exclude_reqs):
+                    and not b.h2d_inflight
+                    and not (b.ref_ids & exclude_reqs)):
                 b.dram_slot = self._dram_free.pop()
                 b.d2h_inflight = True
+                self._mut += 1
                 descs.append(self._desc(b, "d2h"))
         return descs
 
@@ -133,16 +419,21 @@ class TwoTierBlockTable:
         b.d2h_inflight = False
         if b.loc == BlockLoc.HBM:
             b.loc = BlockLoc.BOTH
+        self._mut += 1
         self.eager_d2h_blocks += 1
 
     # -- preemption (swap-out) ----------------------------------------------------
     def preempt(self, req_id: int) -> List[TransferDesc]:
         """Rotate a request out of HBM. BOTH blocks are freed instantly; only
-        blocks without a DRAM copy need a transfer. Returns D2H descriptors;
-        call complete_swap_out(req_id) when they land."""
+        blocks without a DRAM copy need a transfer. Shared prefix blocks
+        (refcount > 1) stay resident — other live requests read them.
+        Returns D2H descriptors; call complete_swap_out(req_id) when they
+        land."""
         descs = []
         for bid in self._by_req.get(req_id, []):
             b = self._blocks[bid]
+            if b.ref_count > 1:
+                continue
             if b.loc == BlockLoc.BOTH:
                 self._release_hbm(b)
                 b.loc = BlockLoc.DRAM
@@ -150,18 +441,22 @@ class TwoTierBlockTable:
             elif b.loc == BlockLoc.HBM:
                 if b.d2h_inflight:      # eager copy already in flight: let it land
                     continue
-                if not self._dram_free:
+                slot = self._take_dram_slot()
+                if slot is None:
                     raise OutOfBlocks("DRAM exhausted during preemption")
-                b.dram_slot = self._dram_free.pop()
+                b.dram_slot = slot
                 b.d2h_inflight = True
                 descs.append(self._desc(b, "d2h"))
                 self.preempt_d2h_blocks += 1
         return descs
 
     def complete_swap_out(self, req_id: int) -> None:
-        """All D2H for a preempted request landed: drop HBM residency."""
+        """All D2H for a preempted request landed: drop HBM residency
+        (shared prefix blocks keep theirs)."""
         for bid in self._by_req.get(req_id, []):
             b = self._blocks[bid]
+            if b.ref_count > 1:
+                continue
             b.d2h_inflight = False
             if b.loc in (BlockLoc.HBM, BlockLoc.BOTH):
                 self._release_hbm(b)
@@ -172,11 +467,15 @@ class TwoTierBlockTable:
     def swap_in(self, req_id: int) -> List[TransferDesc]:
         descs = []
         need = [self._blocks[bid] for bid in self._by_req.get(req_id, [])
-                if self._blocks[bid].loc == BlockLoc.DRAM]
-        if len(self._hbm_free) < len(need):
+                if self._blocks[bid].loc == BlockLoc.DRAM
+                and not self._blocks[bid].h2d_inflight]
+        if len(self._hbm_free) + self._evictable_hbm() < len(need):
             raise OutOfBlocks("HBM exhausted during swap-in")
         for b in need:
-            b.hbm_slot = self._hbm_free.pop()
+            slot = self._take_hbm_slot()
+            if slot is None:
+                raise OutOfBlocks("HBM exhausted during swap-in")
+            b.hbm_slot = slot
             b.h2d_inflight = True
             descs.append(self._desc(b, "h2d"))
             self.swapin_h2d_blocks += 1
@@ -189,21 +488,56 @@ class TwoTierBlockTable:
                 b.h2d_inflight = False
                 b.loc = BlockLoc.BOTH   # DRAM copy retained (free re-preempt)
 
-    # -- finish -----------------------------------------------------------------
-    def free_request(self, req_id: int) -> None:
+    # -- release (decref-and-retain) ---------------------------------------------
+    def release_request(self, req_id: int) -> None:
+        """Drop the request's references. A block reaching refcount 0 is
+        retained in the prefix cache when it is content-addressed (hashed +
+        synced); otherwise its slots are freed immediately (always, when the
+        cache is disabled)."""
         for bid in self._by_req.pop(req_id, []):
-            b = self._blocks.pop(bid)
-            if b.hbm_slot is not None and b.loc in (BlockLoc.HBM, BlockLoc.BOTH):
-                self._hbm_free.append(b.hbm_slot)
-            if b.dram_slot is not None and b.loc in (BlockLoc.DRAM, BlockLoc.BOTH):
-                self._dram_free.append(b.dram_slot)
+            b = self._blocks.get(bid)
+            if b is None:
+                continue
+            b.ref_ids.discard(req_id)
+            if b.ref_ids:
+                continue
+            if (self.prefix_cache and b.hash is not None and b.synced
+                    and self._hash_index.get(b.hash, bid) == bid):
+                self._hash_index.setdefault(b.hash, bid)
+                self._cached_lru[bid] = None
+                self._mut += 1
+                self._touch(b)
+                self.retained_blocks += 1
+            else:
+                self._free_block(b)
+
+    def _free_block(self, b: Block) -> None:
+        if b.hash is not None and self._hash_index.get(b.hash) == b.block_id:
+            del self._hash_index[b.hash]
+        if b.hbm_slot is not None and b.loc in (BlockLoc.HBM, BlockLoc.BOTH):
+            self._hbm_free.append(b.hbm_slot)
+        if b.dram_slot is not None and b.loc in (BlockLoc.DRAM, BlockLoc.BOTH):
+            self._dram_free.append(b.dram_slot)
+        self._blocks.pop(b.block_id, None)
 
     # -- invariants (tested) ------------------------------------------------------
     def check_invariants(self) -> None:
         hbm_used = set()
         dram_used = set()
+        referenced: Dict[int, Set[int]] = {}
+        for rid, bids in self._by_req.items():
+            for bid in bids:
+                referenced.setdefault(bid, set()).add(rid)
         for b in self._blocks.values():
-            if b.loc in (BlockLoc.HBM, BlockLoc.BOTH):
+            assert b.ref_ids == referenced.get(b.block_id, set()), \
+                f"refcount drift on block {b.block_id}"
+            if b.ref_ids:
+                assert b.block_id not in self._cached_lru, \
+                    "referenced block sitting in the refcount-0 cache"
+            else:
+                assert b.block_id in self._cached_lru, \
+                    "refcount-0 block neither cached nor freed (leak)"
+            if b.loc in (BlockLoc.HBM, BlockLoc.BOTH) or b.h2d_inflight:
                 assert b.hbm_slot is not None
                 assert b.hbm_slot not in hbm_used, "HBM slot double-booked"
                 hbm_used.add(b.hbm_slot)
@@ -213,8 +547,18 @@ class TwoTierBlockTable:
                 dram_used.add(b.dram_slot)
             assert not (b.d2h_inflight and b.h2d_inflight), \
                 "block is both swap-in dst and swap-out src (data race)"
+        for h, bid in self._hash_index.items():
+            assert bid in self._blocks, "hash index points at a dead block"
+            assert self._blocks[bid].hash == h, "hash index mismatch"
         assert not (hbm_used & set(self._hbm_free)), "freed slot still in use"
         assert len(hbm_used) + len(self._hbm_free) <= self.num_hbm_blocks
+        if self.prefix_cache:
+            raw = sum(1 for bid in self._cached_lru
+                      if self._blocks[bid].loc in (BlockLoc.HBM, BlockLoc.BOTH)
+                      and not self._blocks[bid].d2h_inflight
+                      and not self._blocks[bid].h2d_inflight)
+            assert self._evictable_hbm() == raw, \
+                "evictable-count memo drifted (missed _mut bump)"
 
     # -- helpers --------------------------------------------------------------
     def _release_hbm(self, b: Block) -> None:
@@ -225,5 +569,6 @@ class TwoTierBlockTable:
     def _desc(self, b: Block, direction: str) -> TransferDesc:
         src = b.hbm_slot if direction == "d2h" else b.dram_slot
         dst = b.dram_slot if direction == "d2h" else b.hbm_slot
-        return TransferDesc(b.block_id, b.req_id, direction, src, dst,
+        rid = min(b.ref_ids) if b.ref_ids else -1
+        return TransferDesc(b.block_id, rid, direction, src, dst,
                             self.block_bytes, self.segments_per_block)

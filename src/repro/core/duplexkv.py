@@ -1,4 +1,5 @@
-"""DuplexKV rotation engine: block table + transfer engine + eager rotation.
+"""DuplexKV rotation engine: block table + transfer engine + eager rotation
++ the two-tier prefix cache front door.
 
 Per engine iteration the serving loop calls:
   plan_iteration(preempt_reqs, swapin_reqs) ->
@@ -8,6 +9,14 @@ Per engine iteration the serving loop calls:
 Non-duplex modes do NOT run eager rotation (the paper's MS/MS+MK ablations),
 so preemption pays full D2H cost and the directions serialize — exactly the
 behaviour Table 1 measures.
+
+Prefix cache (``ServingConfig.prefix_cache``): ``lookup_prefix`` chains the
+prompt's per-block content hashes and asks the table to share any cached
+prefix blocks; DRAM-tier hits queue promotion H2D transfers that ride the
+next ``plan_iteration``'s duplex H2D direction (they complete within the
+iteration, like swap-ins). ``finish`` becomes decref-and-retain. Disabled
+(the default), every path is bit-identical to the exclusive-ownership
+engine.
 """
 from __future__ import annotations
 
@@ -15,8 +24,27 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.configs.base import HardwareProfile, ModelConfig, ServingConfig
-from repro.core.blocktable import OutOfBlocks, TransferDesc, TwoTierBlockTable
+from repro.core.blocktable import (KVView, OutOfBlocks, TransferDesc,
+                                   TwoTierBlockTable)
 from repro.core.transfer import TransferEngine, TransferStats, engine_for_flags
+
+# Root of the chained prefix hash (an arbitrary fixed odd constant; Python
+# hashes ints/tuples-of-ints deterministically, so chains are stable across
+# processes regardless of PYTHONHASHSEED).
+_HASH_ROOT = 0x5EED_C2C1
+
+
+def prefix_hash_chain(prompt_ids: Sequence[int], block_size: int) -> List[int]:
+    """Chained content hashes over the prompt's *full* blocks:
+    ``h_i = hash((h_{i-1}, tokens[i*bs:(i+1)*bs]))``."""
+    n_full = len(prompt_ids) // block_size
+    chain: List[int] = []
+    h = _HASH_ROOT
+    for i in range(n_full):
+        h = hash((h, tuple(int(t) for t in
+                           prompt_ids[i * block_size:(i + 1) * block_size])))
+        chain.append(h)
+    return chain
 
 
 def block_bytes_of(cfg: ModelConfig, block_size: int) -> Tuple[int, int]:
@@ -57,14 +85,80 @@ class DuplexKV:
         bb, segs = block_bytes_of(cfg, serving.block_size)
         self.block_bytes = bb
         layout_segs = 1 if serving.block_first_layout else segs
+        self.prefix_cache = serving.prefix_cache
         self.table = TwoTierBlockTable(serving.num_hbm_blocks,
                                        serving.num_dram_blocks,
-                                       bb, layout_segs)
+                                       bb, layout_segs,
+                                       prefix_cache=serving.prefix_cache)
         self.engine = engine_for_flags(
             hw, block_first=serving.block_first_layout,
             batched_kernel=serving.batched_transfer_kernel,
             duplex=serving.duplex)
         self.eager = serving.eager_rotation and serving.duplex
+        self._chains: Dict[int, List[int]] = {}     # req_id -> prefix hashes
+        self._promotions: List[TransferDesc] = []   # queued DRAM-hit H2D
+        self.cache_lookup_tokens = 0                # prompt tokens probed
+
+    # -- prefix cache ------------------------------------------------------------
+    def lookup_prefix(self, req_id: int,
+                      prompt_ids: Optional[Sequence[int]]) -> int:
+        """Content-addressed prefix lookup for a newly arrived request.
+        Shares (increfs) every cached prefix block, queues promotion H2D for
+        DRAM-tier hits, and returns the number of prompt tokens whose KV is
+        already resident. Capped at ``len(prompt_ids) - 1`` so at least one
+        prompt token is always prefilled (first-token logits)."""
+        if not self.prefix_cache or not prompt_ids:
+            return 0
+        chain = prefix_hash_chain(prompt_ids, self.serving.block_size)
+        if not chain:
+            return 0
+        self._chains[req_id] = chain
+        self.cache_lookup_tokens += len(prompt_ids)
+        cached, promos = self.table.match_prefix(
+            req_id, chain, max_tokens=len(prompt_ids) - 1,
+            block_size=self.serving.block_size)
+        self._promotions.extend(promos)
+        return cached
+
+    def drop_prefix_refs(self, req_id: int) -> None:
+        """Un-pin a still-waiting request's cache-hit blocks (the engine's
+        stall-breaker): the blocks return to refcount 0 — evictable again —
+        and the request re-enters admission uncached. Its hash chain is
+        kept so the blocks it eventually prefills still register."""
+        self.table.release_request(req_id)
+
+    def cache_counters(self) -> Dict[str, int]:
+        """Prefix-cache counters (per replica; the router sums them)."""
+        t = self.table
+        return dict(cache_hit_tokens=t.cache_hit_tokens,
+                    cache_hit_blocks=t.cache_hit_blocks,
+                    cache_lookup_tokens=self.cache_lookup_tokens,
+                    dram_hit_blocks=t.dram_hit_blocks,
+                    cow_blocks=t.cow_blocks,
+                    retained_blocks=t.retained_blocks,
+                    demoted_blocks=t.demoted_blocks,
+                    evicted_blocks=t.evicted_blocks,
+                    cached_blocks=t.cached_blocks)
+
+    # -- scheduler residency view --------------------------------------------------
+    def scheduler_view(self, requests) -> KVView:
+        """Residency snapshot for the scheduler's block accounting: admission
+        demand shrinks by HBM-resident (cached/shared) blocks; preemption
+        credit shrinks to exclusively held blocks."""
+        from repro.core.types import RequestState
+        view = KVView()
+        for r in requests:
+            if r.state in (RequestState.WAITING, RequestState.ROTARY):
+                view.resident[r.req_id] = self.hbm_resident(r.req_id)
+            elif r.state == RequestState.RUNNING:
+                view.releasable[r.req_id] = self.releasable_hbm(r.req_id)
+        return view
+
+    def hbm_resident(self, req_id: int) -> int:
+        return self.table.hbm_blocks_of(req_id)
+
+    def releasable_hbm(self, req_id: int) -> int:
+        return self.table.releasable_hbm_blocks_of(req_id)
 
     # -- iteration planning ------------------------------------------------------
     def plan_iteration(self, preempt_reqs: Sequence[int],
@@ -88,6 +182,10 @@ class DuplexKV:
             except OutOfBlocks:  # stays rotary this iteration
                 continue
         swapin_reqs = admitted
+        # DRAM-tier cache hits promote alongside swap-ins (same duplex H2D)
+        promos = self._promotions
+        self._promotions = []
+        h2d.extend(promos)
         stats = self.engine.execute(d2h, h2d)
 
         eager_stats = None
@@ -105,6 +203,8 @@ class DuplexKV:
                         self.table.complete_d2h(d.block_id)
 
         # completions (the sim advances time; real mode would poll events)
+        for d in promos:
+            self.table.complete_promotion(d.block_id)
         for rid in swapin_reqs:
             self.table.complete_swap_in(rid)
         return IterationTransfers(stats=stats, eager_stats=eager_stats,
@@ -119,15 +219,23 @@ class DuplexKV:
     def grow(self, req_id: int, new_total_blocks: int) -> None:
         have = len(self.table.blocks_of(req_id))
         if new_total_blocks > have:
-            self.table.alloc_hbm(req_id, new_total_blocks - have)
+            self.table.alloc(req_id, new_total_blocks - have)
 
     def sync_progress(self, req_id: int, tokens: int) -> None:
-        """Mark fully-filled blocks as synced (eager-rotation candidates)."""
+        """Mark fully-filled blocks as synced (eager-rotation candidates) and
+        content-address full prompt blocks (prefix-cache mode)."""
         full = tokens // self.serving.block_size
         self.table.mark_synced(req_id, full)
+        chain = self._chains.get(req_id)
+        if chain:
+            self.table.register_hashes(req_id, chain, full)
 
     def finish(self, req_id: int) -> None:
-        self.table.free_request(req_id)
+        """Decref-and-retain: content-addressed blocks stay cached at
+        refcount 0; everything else (and everything, with the cache off)
+        frees immediately."""
+        self._chains.pop(req_id, None)
+        self.table.release_request(req_id)
 
     def b_xfer_effective(self) -> int:
         """Blocks/iteration the link can sustain (reflects swap bandwidth)."""

@@ -11,9 +11,10 @@ Faithful implementation of the four steps:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from repro.configs.base import RotaSchedConfig
+from repro.core.blocktable import KVView
 from repro.core.types import Request, RequestState
 from repro.core.vlt import vlt
 
@@ -27,14 +28,32 @@ class ScheduleDecision:
 
 def lvf_schedule(requests: Sequence[Request], *, t_now: float,
                  b_hbm_free: int, block_size: int,
-                 cfg: RotaSchedConfig) -> ScheduleDecision:
-    """Paper Algorithm 1. ``requests`` = Q_R ∪ Q_W ∪ Q_S (any order)."""
+                 cfg: RotaSchedConfig,
+                 kv_view: Optional[KVView] = None) -> ScheduleDecision:
+    """Paper Algorithm 1. ``requests`` = Q_R ∪ Q_W ∪ Q_S (any order).
+
+    ``kv_view`` (prefix-cache mode) shrinks the block accounting by the
+    cached share: admitting a request with cache-hit blocks only demands the
+    uncached suffix; preempting a request only credits its exclusively held
+    blocks (shared prefixes stay resident, so rotation frees less).
+    """
     q_run = [r for r in requests if r.state == RequestState.RUNNING]
     q_wait = [r for r in requests if r.state == RequestState.WAITING]
     q_rot = [r for r in requests if r.state == RequestState.ROTARY]
 
     def blk(r: Request) -> int:
-        return r.blocks_needed(block_size)
+        need = r.blocks_needed(block_size)
+        if kv_view is not None and r.state in (RequestState.WAITING,
+                                               RequestState.ROTARY):
+            need = max(need - kv_view.resident.get(r.req_id, 0), 0)
+        return need
+
+    def freeable(r: Request) -> int:
+        """Blocks a preemption of ``r`` would actually release."""
+        need = r.blocks_needed(block_size)
+        if kv_view is not None:
+            return min(need, kv_view.releasable.get(r.req_id, need))
+        return need
 
     demand = sum(blk(r) for r in q_wait + q_rot)
     if b_hbm_free >= demand:                                   # step ①
@@ -81,6 +100,6 @@ def lvf_schedule(requests: Sequence[Request], *, t_now: float,
             break
         if r.state == RequestState.RUNNING and vlts[r.req_id] < 0:
             preempted.append(r)
-            b_swap -= blk(r)
+            b_swap -= freeable(r)
 
     return ScheduleDecision(prioritized=prioritized, preempted=preempted)

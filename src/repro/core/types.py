@@ -105,6 +105,7 @@ class RequestOutput:
     ttft_s: Optional[float] = None     # live TTFT (None before first token)
     last_tbt_s: Optional[float] = None
     mean_tbt_s: Optional[float] = None
+    cached_tokens: int = 0             # prompt tokens served by the prefix cache
 
 
 @dataclasses.dataclass
@@ -124,6 +125,7 @@ class Request:
     generated_ids: List[int] = dataclasses.field(default_factory=list)
     tokens_generated: int = 0
     prefill_pos: int = 0             # chunked-prefill progress (tokens done)
+    num_cached_tokens: int = 0       # prompt tokens served by the prefix cache
     t_first_token: Optional[float] = None
     t_last_token: Optional[float] = None   # time of last generated token
     t_run_start: Optional[float] = None    # time entering RUNNING
@@ -205,7 +207,8 @@ class Request:
             slo_class=self.slo_class,
             ttft_s=self.ttft(),
             last_tbt_s=ts[-1] - ts[-2] if n > 1 else None,
-            mean_tbt_s=(ts[-1] - ts[0]) / (n - 1) if n > 1 else None)
+            mean_tbt_s=(ts[-1] - ts[0]) / (n - 1) if n > 1 else None,
+            cached_tokens=self.num_cached_tokens)
 
     # -- metrics -------------------------------------------------------------
     def ttft(self) -> Optional[float]:

@@ -44,6 +44,7 @@ class EngineStats:
     eager_blocks: int = 0
     dropped: int = 0
     aborted: int = 0                   # client cancellations (abort API)
+    prefill_tokens: int = 0            # prompt tokens actually executed
 
     def merged_with(self, other: "EngineStats") -> "EngineStats":
         return EngineStats(*(a + b for a, b in
@@ -92,7 +93,26 @@ class AdmissionController:
         self.bs = block_size
         self.real = real_executor
 
-    def apply(self, decision) -> AdmissionOutcome:
+    def _admit_need(self, r: Request, kv_view) -> int:
+        """HBM blocks the request must still acquire. With the prefix cache
+        on (``kv_view`` set — the same snapshot the scheduler used, so the
+        two layers can never drift), admission charges only the uncached
+        suffix: cache-hit blocks and shared prefixes a ROTARY request left
+        resident are free."""
+        need = r.blocks_needed(self.bs)
+        if kv_view is not None:
+            need = max(need - kv_view.resident.get(r.req_id, 0), 0)
+        return need
+
+    def _freed_by(self, r: Request, kv_view) -> int:
+        """HBM blocks a preemption actually releases (shared prefix blocks
+        stay resident for their other referencing requests)."""
+        need = r.blocks_needed(self.bs)
+        if kv_view is not None:
+            return min(need, kv_view.releasable.get(r.req_id, need))
+        return need
+
+    def apply(self, decision, kv_view=None) -> AdmissionOutcome:
         out = AdmissionOutcome()
         for r in decision.preempted:
             if r.state != RequestState.RUNNING:
@@ -103,10 +123,10 @@ class AdmissionController:
             if self.real is not None:
                 self.real.swap_out(r.req_id)
 
-        freed = sum(r.blocks_needed(self.bs) for r in decision.preempted)
+        freed = sum(self._freed_by(r, kv_view) for r in decision.preempted)
         budget = self.kv.hbm_free_blocks + freed
         for r in decision.prioritized:
-            need = r.blocks_needed(self.bs)
+            need = self._admit_need(r, kv_view)
             if need > budget:
                 continue
             if r.state == RequestState.ROTARY \
@@ -207,6 +227,10 @@ class EngineCore:
         self.stats = EngineStats()
         self.clock = 0.0
         self._exec_ema = 0.03   # for auto B_xfer sizing
+        # Prefix caching requires content (token ids) and a simulated device;
+        # the RealExecutor keeps dense per-request caches that cannot share
+        # prefixes, so the cache is forced off under it.
+        self._prefix_cache = serving.prefix_cache and real_executor is None
         self.admission = AdmissionController(self.kv, self.stats,
                                              serving.block_size,
                                              real_executor)
@@ -349,14 +373,32 @@ class EngineCore:
             rate = self.kv.engine.sustained_block_rate(
                 self.kv.block_bytes, self.kv.table.segments_per_block)
             b_xfer = max(int(rate * self._exec_ema), 1)
+        kv_view = (self.kv.scheduler_view(self.active)
+                   if self._prefix_cache else None)
         decision = self.scheduler.schedule(
-            self.active, t, self.kv.hbm_free_blocks, bs, b_xfer=b_xfer)
+            self.active, t, self.kv.hbm_free_blocks, bs, b_xfer=b_xfer,
+            kv_view=kv_view)
 
-        # -- admission / preemption -----------------------------------------
-        adm = self.admission.apply(decision)
+        # -- admission / preemption (same residency snapshot as the
+        # scheduler, so the two layers' block accounting cannot drift) ------
+        adm = self.admission.apply(decision, kv_view=kv_view)
 
         # -- build device batch ---------------------------------------------
         plan = self.batcher.build(self.active, adm, t)
+
+        # stall-breaker: cache-hit blocks pinned at ingest by still-waiting
+        # requests are neither evictable (refcount > 0) nor preemptible (no
+        # running owner). If an iteration schedules nothing at all while
+        # such pins exist, they may be starving admission of the very blocks
+        # it needs — un-pin them; the requests retry uncached next step.
+        if (self._prefix_cache and plan.empty and not adm.started
+                and not adm.swapin_ids and not adm.preempt_ids):
+            for r in self.active:
+                if (r.state == RequestState.WAITING and r.num_cached_tokens
+                        and r.prefill_pos == r.num_cached_tokens):
+                    self.kv.drop_prefix_refs(r.req_id)
+                    r.num_cached_tokens = 0
+                    r.prefill_pos = 0
         # budgeted-but-unstarted requests (chunk budget exhausted, OOB) stay
         # WAITING and are not admissions; they retry next iteration
         admitted = [r.req_id for r in adm.started
@@ -377,6 +419,7 @@ class EngineCore:
         self.stats.iterations += 1
         self.stats.exec_time += exec_s
         self.stats.transfer_time += tr_s
+        self.stats.prefill_tokens += plan.prefill_tokens
         self._exec_ema = 0.9 * self._exec_ema + 0.1 * exec_s
         if xfers.eager_stats:
             self.stats.eager_blocks += int(
@@ -451,7 +494,16 @@ class EngineCore:
     # ------------------------------------------------------------------ utils
     def _ingest(self, t: float) -> None:
         while self._pending and self._pending[0][0] <= t:
-            self.active.append(heapq.heappop(self._pending)[2])
+            r = heapq.heappop(self._pending)[2]
+            if self._prefix_cache and r.prefill_pos == 0:
+                # content-addressed lookup on arrival: hit blocks are shared
+                # (incref'd) now so they cannot be evicted while r waits, and
+                # prefill starts at the first uncached token
+                cached = self.kv.lookup_prefix(r.req_id, r.prompt_ids)
+                if cached:
+                    r.num_cached_tokens = cached
+                    r.prefill_pos = cached
+            self.active.append(r)
 
     def is_live(self, req_id: int) -> bool:
         """True while the request is pending or active (not finished or

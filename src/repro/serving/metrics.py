@@ -56,6 +56,12 @@ class SLOReport:
     rotations: int
     n_aborted: int = 0
     n_no_token: int = 0
+    # Two-tier prefix cache (0.0/0 with the cache off — replay-inert):
+    # hit rate = cached prompt tokens / total prompt tokens, over all
+    # requests in the report (a merged report therefore yields the
+    # cluster-wide rate from the union of raw requests).
+    prefix_hit_rate: float = 0.0
+    prefill_tokens_saved: int = 0      # prompt tokens served from cache
     per_class: Dict[str, ClassReport] = dataclasses.field(default_factory=dict)
 
     def row(self) -> Dict[str, object]:
@@ -105,6 +111,8 @@ def evaluate(requests: Sequence[Request], *, total_time: float) -> SLOReport:
             tbt_attainment=len(s_tbt_ok) / len(s_live) if s_live else 0.0,
             p50_ttft=percentile(s_ttfts, 50),
             p99_ttft=percentile(s_ttfts, 99))
+    cached_toks = sum(r.num_cached_tokens for r in requests)
+    prompt_toks = sum(r.prompt_len for r in requests)
     return SLOReport(
         n=len(requests),
         ttft_attainment=len(ttft_ok) / n_live if n_live else 0.0,
@@ -119,4 +127,6 @@ def evaluate(requests: Sequence[Request], *, total_time: float) -> SLOReport:
         rotations=sum(r.rotations for r in requests),
         n_aborted=len(requests) - n_live,
         n_no_token=n_live - len(done),
+        prefix_hit_rate=cached_toks / prompt_toks if prompt_toks else 0.0,
+        prefill_tokens_saved=cached_toks,
         per_class=per_class)

@@ -122,6 +122,7 @@ class RequestHandle:
             slo_class=r.slo_class,
             finish_reason=r.finish_reason,
             tokens_generated=r.tokens_generated,
+            cached_tokens=r.num_cached_tokens,
             rotations=r.rotations,
             ttft_s=r.ttft(),
             mean_tbt_s=sum(tbts) / len(tbts) if tbts else None,

@@ -219,3 +219,20 @@ class Router:
         for c in self.replicas:
             out = out.merged_with(c.stats)
         return out
+
+    def aggregate_cache_counters(self) -> Dict[str, int]:
+        """Cluster-wide prefix-cache counters (summed over replicas).
+
+        Each replica owns an independent cache — there is no cross-replica
+        block sharing — so the cluster hit rate depends on how often the
+        routing policy lands same-prefix requests on the same replica
+        (round-robin scatters them; a future prefix-affinity policy would
+        concentrate them). The report-level ``prefix_hit_rate`` from
+        ``aggregate_report`` is already cluster-wide: ``merge_reports``
+        recomputes it from the union of raw requests.
+        """
+        out: Dict[str, int] = {}
+        for c in self.replicas:
+            for k, v in c.kv.cache_counters().items():
+                out[k] = out.get(k, 0) + v
+        return out

@@ -14,6 +14,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.configs.base import RotaSchedConfig
+from repro.core.blocktable import KVView
 from repro.core.rotasched import ScheduleDecision, lvf_schedule
 from repro.core.types import Request, RequestState
 
@@ -23,7 +24,11 @@ class Scheduler:
 
     def schedule(self, reqs: Sequence[Request], t_now: float,
                  hbm_free: int, block_size: int,
-                 b_xfer: Optional[int] = None) -> ScheduleDecision:
+                 b_xfer: Optional[int] = None,
+                 kv_view: Optional[KVView] = None) -> ScheduleDecision:
+        """``kv_view`` is the prefix-cache residency snapshot (None when
+        the cache is off); only RotaSched's accounting consumes it — the
+        baseline policies model systems without prefix reuse."""
         raise NotImplementedError
 
 
@@ -53,11 +58,12 @@ class RotaSched(Scheduler):
     def __init__(self, cfg: RotaSchedConfig):
         self.cfg = cfg
 
-    def schedule(self, reqs, t_now, hbm_free, block_size, b_xfer=None):
+    def schedule(self, reqs, t_now, hbm_free, block_size, b_xfer=None,
+                 kv_view=None):
         cfg = self.cfg if b_xfer is None else dataclasses.replace(
             self.cfg, b_xfer=b_xfer)
         return lvf_schedule(reqs, t_now=t_now, b_hbm_free=hbm_free,
-                            block_size=block_size, cfg=cfg)
+                            block_size=block_size, cfg=cfg, kv_view=kv_view)
 
 
 class FCFS(Scheduler):
@@ -66,7 +72,8 @@ class FCFS(Scheduler):
     may take the blocks a larger swapped request is still short of."""
     name = "fcfs"
 
-    def schedule(self, reqs, t_now, hbm_free, block_size, b_xfer=None):
+    def schedule(self, reqs, t_now, hbm_free, block_size, b_xfer=None,
+                 kv_view=None):
         w, s, run = _split(reqs)
         cands = sorted(s, key=lambda r: r.arrival_time) \
             + sorted(w, key=lambda r: r.arrival_time)
@@ -78,7 +85,8 @@ class WaitingFirst(Scheduler):
     """Static WF (§3.1): new arrivals preempt running requests."""
     name = "wf"
 
-    def schedule(self, reqs, t_now, hbm_free, block_size, b_xfer=None):
+    def schedule(self, reqs, t_now, hbm_free, block_size, b_xfer=None,
+                 kv_view=None):
         w, s, run = _split(reqs)
         w = sorted(w, key=lambda r: r.arrival_time)
         s = sorted(s, key=lambda r: r.arrival_time)
@@ -105,7 +113,8 @@ class SwappedFirst(Scheduler):
     SF starves TTFT to protect TBT of rotated requests."""
     name = "sf"
 
-    def schedule(self, reqs, t_now, hbm_free, block_size, b_xfer=None):
+    def schedule(self, reqs, t_now, hbm_free, block_size, b_xfer=None,
+                 kv_view=None):
         w, s, run = _split(reqs)
         s_sorted = sorted(s, key=lambda r: r.arrival_time)
         admit = _fit(s_sorted, hbm_free, block_size)
@@ -120,7 +129,8 @@ class SJFOracle(Scheduler):
     """Shortest-Job-First with oracle output lengths (Appendix A)."""
     name = "sjf"
 
-    def schedule(self, reqs, t_now, hbm_free, block_size, b_xfer=None):
+    def schedule(self, reqs, t_now, hbm_free, block_size, b_xfer=None,
+                 kv_view=None):
         w, s, run = _split(reqs)
         cands = sorted(s + w, key=lambda r: r.output_len)
         return ScheduleDecision(prioritized=_fit(cands, hbm_free, block_size),
@@ -144,7 +154,8 @@ class LTR(Scheduler):
                 rng.lognormal(0.0, self.noise_sigma))
         return self._pred[r.req_id]
 
-    def schedule(self, reqs, t_now, hbm_free, block_size, b_xfer=None):
+    def schedule(self, reqs, t_now, hbm_free, block_size, b_xfer=None,
+                 kv_view=None):
         w, s, run = _split(reqs)
         cands = sorted(s + w, key=self._predict)
         return ScheduleDecision(prioritized=_fit(cands, hbm_free, block_size),
@@ -157,7 +168,8 @@ class LightLLMLike(Scheduler):
     avoids harmful evictions, stabilizes TBT, sacrifices TTFT under load."""
     name = "lightllm"
 
-    def schedule(self, reqs, t_now, hbm_free, block_size, b_xfer=None):
+    def schedule(self, reqs, t_now, hbm_free, block_size, b_xfer=None,
+                 kv_view=None):
         w, s, run = _split(reqs)
         # peak future demand of running set (oracle output lengths)
         def peak_blocks(r: Request) -> int:

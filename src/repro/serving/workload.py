@@ -95,25 +95,26 @@ def parse_class_mix(spec: str) -> Dict[str, float]:
     return {k: v / total for k, v in mix.items()}
 
 
-def generate_mixed_requests(dataset: str, rps: float, duration_s: float,
-                            seed: int = 0,
-                            class_mix: "Dict[str, float] | str" =
-                            "interactive=0.3,standard=0.5,batch=0.2"
-                            ) -> List[Request]:
-    """Heterogeneous-SLO trace: same arrivals/lengths as the homogeneous
-    trace at this seed; each request is assigned a named SLO class drawn
-    from ``class_mix`` by an independent seeded stream."""
+def _normalize_class_mix(class_mix: "Dict[str, float] | str"
+                         ) -> Dict[str, float]:
     if isinstance(class_mix, str):
-        class_mix = parse_class_mix(class_mix)
-    else:                              # dict path: same per-entry contract
-        for name, weight in class_mix.items():
-            resolve_slo_class(name)    # raises on unknown class
-            if weight <= 0:
-                raise ValueError(f"SLO class weight must be positive: "
-                                 f"{name}={weight}")
-        total = sum(class_mix.values())
-        class_mix = {k: v / total for k, v in class_mix.items()}
-    reqs = generate_requests(dataset, rps, duration_s, seed=seed)
+        return parse_class_mix(class_mix)
+    for name, weight in class_mix.items():  # dict path: same per-entry contract
+        resolve_slo_class(name)    # raises on unknown class
+        if weight <= 0:
+            raise ValueError(f"SLO class weight must be positive: "
+                             f"{name}={weight}")
+    total = sum(class_mix.values())
+    return {k: v / total for k, v in class_mix.items()}
+
+
+def assign_slo_classes(reqs: List[Request],
+                       class_mix: "Dict[str, float] | str",
+                       seed: int = 0) -> List[Request]:
+    """Assign each request a named SLO class drawn from ``class_mix`` by an
+    independent seeded stream (composes with any trace generator — shared
+    arrivals/lengths stay untouched)."""
+    class_mix = _normalize_class_mix(class_mix)
     names = sorted(class_mix)          # deterministic order
     probs = [class_mix[k] for k in names]
     rng = np.random.default_rng([seed, 0xC1A55])   # independent stream
@@ -122,4 +123,59 @@ def generate_mixed_requests(dataset: str, rps: float, duration_s: float,
         name = names[int(k)]
         r.slo_class = name
         r.slo = SLO_CLASSES[name]
+    return reqs
+
+
+def generate_mixed_requests(dataset: str, rps: float, duration_s: float,
+                            seed: int = 0,
+                            class_mix: "Dict[str, float] | str" =
+                            "interactive=0.3,standard=0.5,batch=0.2"
+                            ) -> List[Request]:
+    """Heterogeneous-SLO trace: same arrivals/lengths as the homogeneous
+    trace at this seed; each request is assigned a named SLO class drawn
+    from ``class_mix`` by an independent seeded stream."""
+    reqs = generate_requests(dataset, rps, duration_s, seed=seed)
+    return assign_slo_classes(reqs, class_mix, seed=seed)
+
+
+def generate_shared_prefix_requests(dataset: str, rps: float,
+                                    duration_s: float, *, seed: int = 0,
+                                    share_ratio: float = 0.5,
+                                    prefix_len: int = 256,
+                                    n_prefixes: int = 8,
+                                    vocab_size: int = 32000,
+                                    class_mix: "Dict[str, float] | str | None"
+                                    = None) -> List[Request]:
+    """Trace with real prompt token IDs and controllable prefix sharing —
+    the prefix-cache workload (multi-turn chat / shared system prompts).
+
+    Arrivals and output lengths match ``generate_requests`` at this seed.
+    Each request draws (independent seeded stream): with probability
+    ``share_ratio`` its prompt is one of ``n_prefixes`` common prefixes of
+    ``prefix_len`` tokens followed by a unique suffix (prompt lengths are
+    raised to at least ``prefix_len + 8`` so a real suffix exists);
+    otherwise a fully unique prompt. All token IDs are deterministic per
+    seed. ``class_mix`` composes heterogeneous SLO tiers onto the trace
+    (same assignment stream as ``generate_mixed_requests``).
+    """
+    if not 0.0 <= share_ratio <= 1.0:
+        raise ValueError(f"share_ratio must be in [0, 1]: {share_ratio}")
+    if prefix_len < 1 or n_prefixes < 1:
+        raise ValueError("prefix_len and n_prefixes must be >= 1")
+    reqs = generate_requests(dataset, rps, duration_s, seed=seed)
+    rng = np.random.default_rng([seed, 0x50F1])    # independent stream
+    prefixes = rng.integers(1, vocab_size, size=(n_prefixes, prefix_len))
+    for r in reqs:
+        if rng.random() < share_ratio:
+            k = int(rng.integers(0, n_prefixes))
+            plen = max(r.prompt_len, prefix_len + 8)
+            suffix = rng.integers(1, vocab_size, size=plen - prefix_len)
+            ids = [int(x) for x in prefixes[k]] + [int(x) for x in suffix]
+        else:
+            plen = r.prompt_len
+            ids = [int(x) for x in rng.integers(1, vocab_size, size=plen)]
+        r.prompt_len = plen
+        r.prompt_ids = ids
+    if class_mix:
+        assign_slo_classes(reqs, class_mix, seed=seed)
     return reqs

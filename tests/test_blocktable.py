@@ -1,4 +1,5 @@
-"""Two-tier block table: eager rotation life-cycle + invariants under fuzz."""
+"""Two-tier block table: eager rotation life-cycle + invariants under fuzz
+(ref-counted API; prefix-cache behaviour is covered in test_prefix_cache)."""
 import pytest
 
 pytest.importorskip("hypothesis")
@@ -8,14 +9,15 @@ from hypothesis import given, settings
 from repro.core.blocktable import BlockLoc, OutOfBlocks, TwoTierBlockTable
 
 
-def make_table(hbm=32, dram=64):
+def make_table(hbm=32, dram=64, prefix_cache=False):
     return TwoTierBlockTable(hbm, dram, block_bytes=4 << 20,
-                             segments_per_block=64)
+                             segments_per_block=64,
+                             prefix_cache=prefix_cache)
 
 
 def test_eager_rotation_makes_preemption_free():
     t = make_table()
-    t.alloc_hbm(1, 4)
+    t.alloc(1, 4)
     t.mark_synced(1, 3)                      # 3 full blocks, 1 dirty
     descs = t.eager_candidates(limit=10)
     assert len(descs) == 3
@@ -32,7 +34,7 @@ def test_eager_rotation_makes_preemption_free():
 
 def test_swap_in_retains_dram_copy():
     t = make_table()
-    t.alloc_hbm(1, 2)
+    t.alloc(1, 2)
     t.mark_synced(1, 2)
     for d in t.eager_candidates(10):
         t.complete_d2h(d.block_id)
@@ -50,19 +52,30 @@ def test_swap_in_retains_dram_copy():
 
 def test_out_of_blocks():
     t = make_table(hbm=2)
-    t.alloc_hbm(1, 2)
+    t.alloc(1, 2)
     with pytest.raises(OutOfBlocks):
-        t.alloc_hbm(2, 1)
+        t.alloc(2, 1)
 
 
-def test_finish_frees_everything():
+def test_release_frees_everything():
     t = make_table()
-    t.alloc_hbm(1, 5)
+    t.alloc(1, 5)
     t.mark_synced(1, 5)
     for d in t.eager_candidates(10):
         t.complete_d2h(d.block_id)
-    t.free_request(1)
+    t.release_request(1)
     assert t.hbm_free == 32 and t.dram_free == 64
+
+
+def test_blocks_are_refcounted_not_owned():
+    """Every allocated block carries an explicit reference set (no more
+    exclusive req_id ownership)."""
+    t = make_table()
+    blocks = t.alloc(7, 3)
+    assert all(b.ref_ids == {7} and b.ref_count == 1 for b in blocks)
+    t.release_request(7)
+    assert t.blocks_of(7) == []
+    t.check_invariants()
 
 
 @given(st.lists(st.tuples(st.sampled_from(["alloc", "sync", "eager",
@@ -77,7 +90,7 @@ def test_invariants_under_random_ops(ops):
     for op, rid, n in ops:
         try:
             if op == "alloc" and rid not in swapped_out:
-                t.alloc_hbm(rid, n)
+                t.alloc(rid, n)
                 live.add(rid)
             elif op == "sync" and rid in live:
                 t.mark_synced(rid, n)
@@ -93,7 +106,7 @@ def test_invariants_under_random_ops(ops):
                 t.complete_swap_in(rid)
                 swapped_out.discard(rid)
             elif op == "finish" and rid in live:
-                t.free_request(rid)
+                t.release_request(rid)
                 live.discard(rid)
                 swapped_out.discard(rid)
         except OutOfBlocks:

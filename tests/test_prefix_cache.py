@@ -1,0 +1,424 @@
+"""Two-tier prefix cache: content-addressed ref-counted blocks, DRAM-tier
+demotion/promotion, copy-on-write tails, engine integration, cluster
+aggregation, and cache-off golden parity."""
+import copy
+
+import pytest
+
+from repro.configs import GH200, ServingConfig, get_config
+from repro.core.blocktable import BlockLoc, OutOfBlocks, TwoTierBlockTable
+from repro.core.duplexkv import prefix_hash_chain
+from repro.core.types import RequestState
+from repro.serving.engine import ServingEngine
+from repro.serving.metrics import merge_reports
+from repro.serving.router import Router
+from repro.serving.workload import (generate_requests,
+                                    generate_shared_prefix_requests)
+
+CFG = get_config("qwen2.5-32b")
+BS = 4          # table-level tests use a tiny block size
+
+
+def make_table(hbm=32, dram=64):
+    return TwoTierBlockTable(hbm, dram, block_bytes=4 << 20,
+                             segments_per_block=64, prefix_cache=True)
+
+
+def prompt(*families, n=16, salt=0):
+    """Deterministic token ids: block-aligned shared-family prefix followed
+    by a suffix unique to ``salt``."""
+    ids = []
+    for f in families:
+        ids.extend([f] * BS)
+    start = 100 + 1000 * salt
+    ids.extend(range(start, start + max(n - len(ids), 0)))
+    return ids[:n]
+
+
+def prefill(t, rid, ids, cached=0):
+    """Mimic DuplexKV: alloc the uncached suffix, sync, register hashes."""
+    chain = prefix_hash_chain(ids, BS)
+    need = -(-len(ids) // BS) - len(t.blocks_of(rid))
+    if need > 0:
+        t.alloc(rid, need)
+    t.mark_synced(rid, len(ids) // BS)
+    t.register_hashes(rid, chain, len(ids) // BS)
+    t.check_invariants()
+    return chain
+
+
+# ----------------------------------------------------------- sharing basics
+
+def test_second_request_shares_cached_prefix():
+    t = make_table()
+    ids = prompt(1, 1, n=18)         # 2 shared-family blocks + suffix
+    prefill(t, 10, ids)
+    t.release_request(10)            # blocks retained at refcount 0
+    assert t.cached_blocks == 4      # 4 full blocks content-addressed
+    chain = prefix_hash_chain(ids, BS)
+    cached, promos = t.match_prefix(11, chain, max_tokens=len(ids) - 1,
+                                    block_size=BS)
+    assert cached == 16 and promos == []   # all 4 full blocks hit
+    assert all(b.ref_ids == {11} for b in t.blocks_of(11))
+    prefill(t, 11, ids, cached=cached)
+    t.check_invariants()
+
+
+def test_live_prefix_is_shared_between_concurrent_requests():
+    t = make_table()
+    ids_a = prompt(2, 2, n=19, salt=1)
+    ids_b = prompt(2, 2, n=23, salt=2)   # same 2-block prefix, new suffix
+    prefill(t, 1, ids_a)
+    chain_b = prefix_hash_chain(ids_b, BS)
+    cached, _ = t.match_prefix(2, chain_b, max_tokens=len(ids_b) - 1,
+                               block_size=BS)
+    assert cached == 2 * BS          # only the common prefix matches
+    shared = t.blocks_of(2)[:2]
+    assert all(b.ref_ids == {1, 2} for b in shared)
+    prefill(t, 2, ids_b)
+    # releasing one request must not free or demote the shared blocks
+    t.release_request(1)
+    assert all(b.ref_ids == {2} for b in shared)
+    assert all(b.loc in (BlockLoc.HBM, BlockLoc.BOTH) for b in shared)
+    t.check_invariants()
+
+
+def test_hit_tokens_capped_below_prompt_len_with_cow_tail():
+    """A prompt ending exactly on a block boundary caps the hit at
+    prompt_len - 1 and forks the tail block copy-on-write."""
+    t = make_table()
+    ids = prompt(3, 3, n=2 * BS)     # exactly 2 full blocks
+    prefill(t, 1, ids)
+    t.release_request(1)
+    chain = prefix_hash_chain(ids, BS)
+    cached, _ = t.match_prefix(2, chain, max_tokens=len(ids) - 1,
+                               block_size=BS)
+    assert cached == len(ids) - 1    # at least one token is always prefilled
+    assert t.cow_blocks == 1
+    blocks = t.blocks_of(2)
+    assert len(blocks) == 2
+    assert blocks[0].ref_count >= 1          # shared head
+    assert blocks[1].ref_ids == {2}          # exclusive CoW tail
+    assert blocks[1].hash is None            # not content-addressed yet
+    t.check_invariants()
+
+
+def test_preempt_keeps_shared_blocks_resident():
+    t = make_table()
+    ids = prompt(4, 4, n=20)
+    prefill(t, 1, ids)
+    chain = prefix_hash_chain(ids, BS)
+    t.match_prefix(2, chain, max_tokens=len(ids) - 1, block_size=BS)
+    prefill(t, 2, ids)
+    descs = t.preempt(1)
+    t.complete_swap_out(1)
+    # request 1's exclusive tail rotated out; the shared prefix stayed
+    shared = [b for b in t.blocks_of(1) if b.ref_count > 1]
+    assert shared and all(b.loc in (BlockLoc.HBM, BlockLoc.BOTH)
+                          for b in shared)
+    exclusive = [b for b in t.blocks_of(1) if b.ref_count == 1]
+    assert all(b.loc == BlockLoc.DRAM for b in exclusive)
+    # swap-in only moves what actually left
+    descs = t.swap_in(1)
+    assert len(descs) == len(exclusive)
+    t.complete_swap_in(1)
+    t.check_invariants()
+
+
+# ------------------------------------------------- DRAM tier: demote/promote
+
+def test_demoted_cache_entry_hits_via_promotion():
+    """CACHED_HBM -> (eager D2H) -> CACHED_BOTH -> (pressure) ->
+    CACHED_DRAM -> prefix hit promotes back over the C2C link."""
+    t = make_table(hbm=8, dram=32)
+    ids = prompt(5, 5, n=2 * BS + 2)          # 2 full blocks + partial tail
+    prefill(t, 1, ids)
+    t.release_request(1)                      # tail freed, 2 blocks cached
+    assert t.cached_blocks == 2
+    # eager demotion copies the cached entries host-side…
+    for d in t.eager_candidates(10):
+        t.complete_d2h(d.block_id)
+    # …so eviction under pressure is free (HBM copy dropped, DRAM kept)
+    t.alloc(2, 8)                             # exhausts the 8-slot pool
+    assert t.demoted_blocks == 2 and t.evicted_blocks == 0
+    cached_blocks = [b for b in t._blocks.values() if not b.ref_ids]
+    assert all(b.loc == BlockLoc.DRAM for b in cached_blocks)
+    t.release_request(2)
+    # the DRAM-tier entries still serve hits: promotion H2D, not re-prefill
+    chain = prefix_hash_chain(ids, BS)
+    cached, promos = t.match_prefix(3, chain, max_tokens=len(ids) - 1,
+                                    block_size=BS)
+    assert cached == 2 * BS
+    assert len(promos) == 2 and all(d.direction == "h2d" for d in promos)
+    assert t.dram_hit_blocks == 2
+    for d in promos:
+        t.complete_promotion(d.block_id)
+    assert all(b.loc == BlockLoc.BOTH for b in t.blocks_of(3))
+    t.check_invariants()
+
+
+def test_lru_eviction_frees_slots_for_new_allocations():
+    t = make_table(hbm=8, dram=0)             # no DRAM: eviction is terminal
+    for rid, fam in ((1, 6), (2, 7)):
+        prefill(t, rid, prompt(fam, n=BS + 1))
+        t.release_request(rid)
+    assert t.cached_blocks == 2
+    t.alloc(3, 8)                             # forces both evictions
+    assert t.evicted_blocks == 2 and t.cached_blocks == 0
+    assert t.hbm_free == 0
+    with pytest.raises(OutOfBlocks):
+        t.alloc(4, 1)
+    t.check_invariants()
+
+
+# ----------------------------------------------------------- engine level
+
+def _sv(hbm=4000, cache=True, **kw):
+    kw.setdefault("num_dram_blocks", 50000)
+    kw.setdefault("scheduler", "rotasched")
+    return ServingConfig(num_hbm_blocks=hbm, prefix_cache=cache, **kw)
+
+
+def test_shared_trace_fewer_prefill_tokens_and_no_worse_ttft():
+    reps = {}
+    for cache in (False, True):
+        reqs = generate_shared_prefix_requests("sharegpt", 16, 10, seed=1,
+                                               share_ratio=0.5)
+        eng = ServingEngine(CFG, _sv(cache=cache), GH200)
+        reps[cache] = (eng.run(reqs, max_time_s=400), eng)
+    rep_off, eng_off = reps[False]
+    rep_on, eng_on = reps[True]
+    assert eng_on.stats.prefill_tokens < eng_off.stats.prefill_tokens
+    assert rep_on.p99_ttft <= rep_off.p99_ttft
+    assert rep_on.prefix_hit_rate > 0.2
+    assert rep_on.prefill_tokens_saved == (eng_off.stats.prefill_tokens
+                                           - eng_on.stats.prefill_tokens)
+    assert rep_off.prefix_hit_rate == 0.0
+    eng_on.kv.table.check_invariants()
+    # per-request accounting rides the streaming metrics surface
+    assert all(r.num_cached_tokens <= r.prompt_len - 1
+               for r in eng_on.core.submitted)
+
+
+def test_cache_enabled_without_token_ids_is_bit_identical():
+    """Oracle traces carry no prompt ids, so an enabled cache must change
+    nothing: the ref-counted paths reduce exactly to exclusive ownership."""
+    rows = []
+    for cache in (False, True):
+        reqs = generate_requests("sharegpt", 14, 8, seed=3)
+        eng = ServingEngine(CFG, _sv(hbm=2000, cache=cache,
+                                     num_dram_blocks=30000), GH200)
+        rows.append((eng.run(reqs, max_time_s=200).row(), eng.stats))
+    assert rows[0][0] == rows[1][0]
+    assert rows[0][1] == rows[1][1]
+
+
+def test_cache_survives_rotation_traffic_under_pressure():
+    """Demotion traffic + rotary preemption + hits coexist: invariants hold
+    and every request completes."""
+    sv = _sv(hbm=500, num_dram_blocks=100000)
+    reqs = generate_shared_prefix_requests("sharegpt", 12, 12, seed=4,
+                                           share_ratio=0.7, prefix_len=192,
+                                           n_prefixes=4)
+    eng = ServingEngine(CFG, sv, GH200)
+    rep = eng.run(reqs, max_time_s=600)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    c = eng.kv.cache_counters()
+    assert c["demoted_blocks"] > 0           # DRAM-tier demotion happened
+    assert rep.prefix_hit_rate > 0.2
+    eng.kv.table.check_invariants()
+
+
+def test_handle_metrics_report_cached_tokens():
+    eng = ServingEngine(CFG, _sv(), GH200)
+    ids = list(range(1, 129))
+    h1 = eng.add_request(prompt_ids=ids)
+    h1.result()
+    h2 = eng.add_request(prompt_ids=ids)
+    final = h2.result()
+    assert h2.request.num_cached_tokens > 0
+    assert final.cached_tokens == h2.request.num_cached_tokens
+    assert h2.metrics()["cached_tokens"] == h2.request.num_cached_tokens
+    assert h1.metrics()["cached_tokens"] == 0
+
+
+def test_waiting_pins_cannot_deadlock_admission():
+    """Cache-hit blocks pinned at ingest by waiting requests are neither
+    evictable nor preemptible; when every HBM block is pinned this way the
+    engine's stall-breaker must un-pin them so admission proceeds
+    (requests rerun uncached rather than livelock)."""
+    from repro.core.types import SamplingParams
+    sv = _sv(hbm=48, num_dram_blocks=5000)
+    eng = ServingEngine(CFG, sv, GH200)
+    prompts = [list(range(1000 * k, 1000 * k + 257)) for k in range(3)]
+    for p in prompts:      # warm: 3 distinct prefixes fill the pool exactly
+        eng.add_request(prompt_ids=p,
+                        sampling_params=SamplingParams(max_tokens=4)).result()
+    assert eng.kv.table.cached_blocks == 48
+    hs = [eng.add_request(prompt_ids=p,
+                          sampling_params=SamplingParams(max_tokens=320))
+          for p in prompts]
+    for _ in range(20000):
+        eng.step()
+        if all(h.finished for h in hs):
+            break
+    assert all(h.finished for h in hs), \
+        [(h.request.state, h.request.tokens_generated) for h in hs]
+    eng.kv.table.check_invariants()
+
+
+def test_abort_releases_cache_references():
+    eng = ServingEngine(CFG, _sv(hbm=200), GH200)
+    ids = list(range(1, 257))
+    h1 = eng.add_request(prompt_ids=ids)
+    h1.result()
+    h2 = eng.add_request(prompt_ids=ids)
+    for _ in range(2):
+        eng.step()
+    assert h2.abort() is True
+    table = eng.core.kv.table
+    assert table.blocks_of(h2.req_id) == []
+    table.check_invariants()
+    eng.drain()
+    # cached entries are refcount-0 again: a third request still hits
+    h3 = eng.add_request(prompt_ids=ids)
+    h3.result()
+    assert h3.request.num_cached_tokens > 0
+
+
+# --------------------------------------------------------------- workload
+
+def test_shared_prefix_workload_deterministic_and_composable():
+    a = generate_shared_prefix_requests("sharegpt", 10, 5, seed=3,
+                                        share_ratio=0.5)
+    b = generate_shared_prefix_requests("sharegpt", 10, 5, seed=3,
+                                        share_ratio=0.5)
+    assert [r.prompt_ids for r in a] == [r.prompt_ids for r in b]
+    assert all(r.prompt_len == len(r.prompt_ids) for r in a)
+    base = generate_requests("sharegpt", 10, 5, seed=3)
+    assert [r.arrival_time for r in a] == [r.arrival_time for r in base]
+    # some requests share a 256-token prefix
+    heads = [tuple(r.prompt_ids[:256]) for r in a if len(r.prompt_ids) > 256]
+    assert len(heads) != len(set(heads))
+    # composes with heterogeneous SLO tiers
+    mixed = generate_shared_prefix_requests(
+        "sharegpt", 10, 5, seed=3, share_ratio=0.5,
+        class_mix="interactive=0.5,batch=0.5")
+    assert [r.prompt_ids for r in mixed] == [r.prompt_ids for r in a]
+    assert len({r.slo_class for r in mixed}) > 1
+    with pytest.raises(ValueError):
+        generate_shared_prefix_requests("sharegpt", 10, 5, share_ratio=1.5)
+
+
+def test_share_ratio_zero_yields_no_hits():
+    reqs = generate_shared_prefix_requests("sharegpt", 10, 5, seed=5,
+                                           share_ratio=0.0)
+    eng = ServingEngine(CFG, _sv(), GH200)
+    rep = eng.run(reqs, max_time_s=300)
+    assert rep.prefix_hit_rate == 0.0
+    assert eng.kv.table.cache_hit_blocks == 0
+
+
+# ----------------------------------------------------------------- router
+
+def test_router_reports_cluster_wide_hit_rate():
+    reqs = generate_shared_prefix_requests("sharegpt", 16, 8, seed=2,
+                                           share_ratio=0.6)
+    router = Router(CFG, _sv(), GH200, replicas=2, policy="round-robin")
+    rep = router.run(reqs, max_time_s=400)
+    assert rep.prefix_hit_rate > 0.0
+    merged = merge_reports([c.submitted for c in router.replicas],
+                           total_time=router.clock)
+    assert rep.prefix_hit_rate == merged.prefix_hit_rate
+    assert rep.prefill_tokens_saved == sum(
+        r.num_cached_tokens for c in router.replicas for r in c.submitted)
+    counters = router.aggregate_cache_counters()
+    assert counters["cache_hit_tokens"] == sum(
+        c.kv.table.cache_hit_tokens for c in router.replicas)
+    assert counters["cache_hit_tokens"] > 0
+
+
+# ------------------------------------------------- property-based (fuzz)
+
+def test_refcount_soundness_under_random_ops():
+    pytest.importorskip("hypothesis")
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    families = st.integers(0, 2)
+    ops = st.lists(
+        st.tuples(st.sampled_from(["arrive", "sync", "eager", "preempt",
+                                   "swapin", "release", "pressure"]),
+                  st.integers(0, 5),       # request id
+                  families,                # prompt family (shared prefixes)
+                  st.integers(1, 5)),      # blocks / limit
+        min_size=1, max_size=70)
+
+    @given(ops)
+    @settings(max_examples=100, deadline=None)
+    def run(seq):
+        t = TwoTierBlockTable(16, 24, block_bytes=4 << 20,
+                              segments_per_block=64, prefix_cache=True)
+        live, swapped, prompts = set(), set(), {}
+        press_rid = 1000                     # cache-pressure allocator ids
+        for op, rid, fam, n in seq:
+            try:
+                if op == "arrive" and rid not in live:
+                    # family 1 prompts end mid-block; families 0/2 end on a
+                    # block boundary so their hits exercise copy-on-write
+                    ids = [fam] * (n * BS) + [99, 98] * (fam % 2)
+                    chain = prefix_hash_chain(ids, BS)
+                    cached, promos = t.match_prefix(
+                        rid, chain, max_tokens=len(ids) - 1, block_size=BS)
+                    # hit tokens never cover the full prompt
+                    assert cached <= len(ids) - 1
+                    for d in promos:
+                        t.complete_promotion(d.block_id)
+                    need = -(-len(ids) // BS) - len(t.blocks_of(rid))
+                    if need > 0:
+                        t.alloc(rid, need)
+                    live.add(rid)
+                    prompts[rid] = (ids, chain)
+                elif op == "sync" and rid in live:
+                    ids, chain = prompts[rid]
+                    full = len(ids) // BS
+                    t.mark_synced(rid, full)
+                    t.register_hashes(rid, chain, full)
+                elif op == "eager":
+                    for d in t.eager_candidates(n):
+                        t.complete_d2h(d.block_id)
+                elif op == "preempt" and rid in live and rid not in swapped:
+                    t.preempt(rid)
+                    t.complete_swap_out(rid)
+                    swapped.add(rid)
+                elif op == "swapin" and rid in swapped:
+                    t.swap_in(rid)
+                    t.complete_swap_in(rid)
+                    swapped.discard(rid)
+                elif op == "release" and rid in live:
+                    t.release_request(rid)
+                    live.discard(rid)
+                    swapped.discard(rid)
+                    prompts.pop(rid, None)
+                elif op == "pressure":       # churn that forces evictions
+                    t.alloc(press_rid, n)
+                    t.release_request(press_rid)
+                    press_rid += 1
+            except OutOfBlocks:
+                if op == "preempt":
+                    # DRAM exhausted mid-preempt: the request is partially
+                    # rotated out — treat it as swapped (residency assertion
+                    # below only covers fully resident requests)
+                    swapped.add(rid)
+            # ref-count soundness + data-race freedom + no leak, every step
+            t.check_invariants()
+            # no block referenced by an HBM-resident (unswapped) request may
+            # be demoted or evicted out from under it
+            for r in live - swapped:
+                for b in t.blocks_of(r):
+                    if b.synced or b.ref_count > 1:
+                        assert (b.loc in (BlockLoc.HBM, BlockLoc.BOTH)
+                                or b.h2d_inflight), \
+                            f"resident request {r} lost block {b.block_id}"
+
+    run()
