@@ -23,6 +23,7 @@ MODULES = [
     ("roofline", "benchmarks.bench_roofline"),
     ("router", "benchmarks.bench_router_scaling"),
     ("prefix_cache", "benchmarks.bench_prefix_cache"),
+    ("paged_decode", "benchmarks.bench_paged_decode"),
 ]
 
 

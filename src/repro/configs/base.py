@@ -379,6 +379,12 @@ class ServingConfig:
     # DRAM-tier demotion through DuplexKV). Default off: replay bit-identical
     # to the exclusive-ownership engine. See DESIGN.md §Two-tier prefix cache.
     prefix_cache: bool = False
+    # PagedModelRunner: batched REAL execution over a pooled block-first KV
+    # cache addressed by the engine's block table (Pallas paged-attention
+    # decode + kv_copy rotation; composes with prefix_cache). Default off:
+    # the executor stays the pure timing model and replay is bit-identical.
+    # See DESIGN.md §Execution layer.
+    paged_runner: bool = False
 
 
 # ---------------------------------------------------------------------------

@@ -120,6 +120,9 @@ class TwoTierBlockTable:
         self._hash_index: Dict[int, int] = {}          # prefix hash -> block
         self._cached_lru: "collections.OrderedDict[int, None]" = \
             collections.OrderedDict()                  # refcount-0 retained
+        # intra-HBM row copies (CoW forks) pending physical execution; only
+        # consumed when a data backend is attached (see DuplexKV)
+        self.pending_d2d: List[Tuple[int, int]] = []   # (src_slot, dst_slot)
         self._tick = 0
         self._mut = 0                  # bumped on cache-membership mutations
         self._evict_memo: Tuple[int, int] = (-1, 0)    # (mut, evictable)
@@ -194,6 +197,35 @@ class TwoTierBlockTable:
         """Blocks [0, upto_index) of the request are fully written."""
         for bid in self._by_req.get(req_id, [])[:upto_index]:
             self._blocks[bid].synced = True
+
+    def drain_pending_d2d(self) -> List[Tuple[int, int]]:
+        out, self.pending_d2d = self.pending_d2d, []
+        return out
+
+    def invalidate_dirty_tail(self, req_id: int, from_block: int) -> None:
+        """Drop the DRAM copy of every block index >= ``from_block`` — the
+        first block THIS iteration's writes touched. Physical-data mode only
+        (DuplexKV gates on its data backend): a dirty block swapped out and
+        back in is BOTH with ``synced=True`` (``complete_swap_out``'s
+        approximation), so a later preemption would free its HBM copy
+        transfer-less — against a host copy that predates the tokens
+        written since the swap-in. Starting at the *written* block (not the
+        full-block watermark) matters: a write that completes a block, or a
+        resumed prefill chunk filling a previously-partial block, leaves it
+        below the watermark yet host-stale. Invalidated blocks re-enter the
+        eager D2H path once (re)synced. The sim path keeps the cheap
+        approximation (timing-only, golden-pinned)."""
+        for i, bid in enumerate(self._by_req.get(req_id, [])):
+            if i < from_block:
+                continue
+            b = self._blocks[bid]
+            if (b.loc == BlockLoc.BOTH and not b.d2h_inflight
+                    and not b.h2d_inflight):
+                self._dram_free.append(b.dram_slot)
+                b.dram_slot = None
+                b.loc = BlockLoc.HBM
+                b.synced = False
+                self._mut += 1
 
     # -- content-addressed prefix cache ---------------------------------------
     def match_prefix(self, req_id: int, chain: Sequence[int],
@@ -295,6 +327,11 @@ class TwoTierBlockTable:
         self._blocks[b.block_id] = b
         self._by_req.setdefault(req_id, []).append(b.block_id)
         self._touch(b)
+        # record the physical row copy; src slot captured now (the source may
+        # be demoted/evicted before the backend drains the queue, but its row
+        # bytes stay intact until the next h2d/execute write, which the
+        # DuplexKV drain ordering runs strictly after)
+        self.pending_d2d.append((src.hbm_slot, slot))
         return b
 
     # -- cache eviction / demotion --------------------------------------------
@@ -465,18 +502,35 @@ class TwoTierBlockTable:
 
     # -- swap-in ---------------------------------------------------------------
     def swap_in(self, req_id: int) -> List[TransferDesc]:
+        """All-or-nothing: either every DRAM-resident block of the request
+        gets an HBM destination (descriptors returned), or no state changes
+        and ``OutOfBlocks`` is raised. A partial failure must roll back —
+        otherwise the half-assigned blocks keep ``h2d_inflight`` with their
+        descriptors discarded, a later retry skips them (already
+        "in flight"), and ``complete_swap_in`` marks them resident without
+        their data ever having moved. The up-front budget check makes the
+        mid-loop failure reachable only when cached-block eviction
+        under-delivers (exclusions/in-flight races), so the rollback is the
+        rare path."""
         descs = []
         need = [self._blocks[bid] for bid in self._by_req.get(req_id, [])
                 if self._blocks[bid].loc == BlockLoc.DRAM
                 and not self._blocks[bid].h2d_inflight]
         if len(self._hbm_free) + self._evictable_hbm() < len(need):
             raise OutOfBlocks("HBM exhausted during swap-in")
+        taken = []
         for b in need:
             slot = self._take_hbm_slot()
             if slot is None:
+                for tb in taken:              # roll back: nothing moved yet
+                    self._hbm_free.append(tb.hbm_slot)
+                    tb.hbm_slot = None
+                    tb.h2d_inflight = False
+                    self.swapin_h2d_blocks -= 1
                 raise OutOfBlocks("HBM exhausted during swap-in")
             b.hbm_slot = slot
             b.h2d_inflight = True
+            taken.append(b)
             descs.append(self._desc(b, "h2d"))
             self.swapin_h2d_blocks += 1
         return descs

@@ -98,6 +98,15 @@ class DuplexKV:
         self._chains: Dict[int, List[int]] = {}     # req_id -> prefix hashes
         self._promotions: List[TransferDesc] = []   # queued DRAM-hit H2D
         self.cache_lookup_tokens = 0                # prompt tokens probed
+        # Optional physical data backend (PagedModelRunner's pool store):
+        # when attached, every transfer descriptor this engine times is ALSO
+        # executed as real row movement (device pool <-> host numpy tier).
+        self.data = None
+
+    def attach_data_backend(self, backend) -> None:
+        """Attach a physical KV store. ``backend`` must provide
+        ``run_d2d(pairs)``, ``run_d2h(descs)`` and ``run_h2d(descs)``."""
+        self.data = backend
 
     # -- prefix cache ------------------------------------------------------------
     def lookup_prefix(self, req_id: int,
@@ -164,10 +173,23 @@ class DuplexKV:
     def plan_iteration(self, preempt_reqs: Sequence[int],
                        swapin_reqs: Sequence[int],
                        iteration_budget_s: float) -> IterationTransfers:
+        # Physical ordering contract (data backend attached): CoW D2D row
+        # copies FIRST (their captured src slots may be re-issued as H2D
+        # destinations below), then preempt D2H reads, then H2D writes.
+        # Model execution (the executor's pool reads/writes) runs strictly
+        # after plan_iteration, so every row lands before it is consumed.
+        if self.data is not None:
+            pending = self.table.drain_pending_d2d()
+            if pending:
+                self.data.run_d2d(pending)
+        else:
+            self.table.drain_pending_d2d()   # keep the queue bounded
         d2h: List[TransferDesc] = []
         h2d: List[TransferDesc] = []
         for rid in preempt_reqs:
             d2h.extend(self.table.preempt(rid))
+        if self.data is not None and d2h:
+            self.data.run_d2h(d2h)           # read rows BEFORE slots free
         # swap-out transfers complete within the iteration (sim semantics);
         # their HBM slots free up BEFORE swap-ins allocate — this ordering is
         # what eager rotation buys: most preempted blocks are BOTH already,
@@ -186,6 +208,8 @@ class DuplexKV:
         promos = self._promotions
         self._promotions = []
         h2d.extend(promos)
+        if self.data is not None and h2d:
+            self.data.run_h2d(h2d)
         stats = self.engine.execute(d2h, h2d)
 
         eager_stats = None
@@ -199,6 +223,8 @@ class DuplexKV:
                     budget_blocks, exclude_reqs=set(preempt_reqs))
                 if descs:
                     eager_stats = self.engine.execute(descs, [])
+                    if self.data is not None:
+                        self.data.run_d2h(descs)
                     for d in descs:
                         self.table.complete_d2h(d.block_id)
 
@@ -221,10 +247,20 @@ class DuplexKV:
         if new_total_blocks > have:
             self.table.alloc(req_id, new_total_blocks - have)
 
-    def sync_progress(self, req_id: int, tokens: int) -> None:
+    def sync_progress(self, req_id: int, tokens: int,
+                      written_from: Optional[int] = None) -> None:
         """Mark fully-filled blocks as synced (eager-rotation candidates) and
-        content-address full prompt blocks (prefix-cache mode)."""
+        content-address full prompt blocks (prefix-cache mode).
+        ``written_from``: first token position this iteration's writes
+        touched (physical mode invalidates host copies from its block on)."""
         full = tokens // self.serving.block_size
+        if self.data is not None:
+            # physical mode: a host copy of a block that just got new tokens
+            # is stale — drop it so the next preemption re-transfers. Gated
+            # on the backend so the sim path stays golden-bit-identical.
+            start = (written_from if written_from is not None
+                     else max(tokens - 1, 0)) // self.serving.block_size
+            self.table.invalidate_dirty_tail(req_id, start)
         self.table.mark_synced(req_id, full)
         chain = self._chains.get(req_id)
         if chain:

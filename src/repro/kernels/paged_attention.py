@@ -22,7 +22,8 @@ NEG_INF = -1e30
 
 
 def _paged_kernel(bt_ref, cl_ref, q_ref, kv_ref, o_ref, acc_ref, m_ref,
-                  l_ref, *, scale: float, page: int, group: int):
+                  l_ref, *, scale: float, page: int, group: int,
+                  layered: bool):
     b = pl.program_id(0)
     j = pl.program_id(1)
     nb = pl.num_programs(1)
@@ -34,8 +35,9 @@ def _paged_kernel(bt_ref, cl_ref, q_ref, kv_ref, o_ref, acc_ref, m_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
 
     q = q_ref[0].astype(jnp.float32) * scale            # (Hkv, G, D)
-    k = kv_ref[0, 0].astype(jnp.float32)                # (P, Hkv, D)
-    v = kv_ref[0, 1].astype(jnp.float32)
+    kv = kv_ref[0, 0] if layered else kv_ref[0]
+    k = kv[0].astype(jnp.float32)                       # (P, Hkv, D)
+    v = kv[1].astype(jnp.float32)
     kt = k.transpose(1, 0, 2)                           # (Hkv, P, D)
     vt = v.transpose(1, 0, 2)
 
@@ -64,24 +66,42 @@ def _paged_kernel(bt_ref, cl_ref, q_ref, kv_ref, o_ref, acc_ref, m_ref,
 
 def paged_attention_tpu(q: jax.Array, kv_pool: jax.Array,
                         block_tables: jax.Array, context_lens: jax.Array,
-                        *, interpret: bool = True) -> jax.Array:
+                        *, layer: int = -1,
+                        interpret: bool = True) -> jax.Array:
     """q: (B, H, D); kv_pool: (NB, 2, P, Hkv, D) block-first;
-    block_tables: (B, MB) int32; context_lens: (B,) int32 -> (B, H, D)."""
+    block_tables: (B, MB) int32; context_lens: (B,) int32 -> (B, H, D).
+
+    ``layer >= 0`` addresses a multi-layer pool (NB, L, 2, P, Hkv, D) whose
+    rows hold *every* layer of one logical block contiguously (the paper's
+    block-first layout, segments_per_block == 1): the BlockSpec index_map
+    picks (block row, layer) so no per-layer slice of the pool is ever
+    materialized outside the kernel."""
     B, H, D = q.shape
-    NB, _, P, Hkv, _ = kv_pool.shape
+    layered = layer >= 0
+    if layered:
+        NB, _, _, P, Hkv, _ = kv_pool.shape
+    else:
+        NB, _, P, Hkv, _ = kv_pool.shape
     MB = block_tables.shape[1]
     group = H // Hkv
     qg = q.reshape(B, Hkv, group, D)
 
     kernel = functools.partial(_paged_kernel, scale=D ** -0.5, page=P,
-                               group=group)
+                               group=group, layered=layered)
+    if layered:
+        kv_spec = pl.BlockSpec(
+            (1, 1, 2, P, Hkv, D),
+            lambda b, j, bt, cl: (bt[b, j], layer, 0, 0, 0, 0))
+    else:
+        kv_spec = pl.BlockSpec(
+            (1, 2, P, Hkv, D),
+            lambda b, j, bt, cl: (bt[b, j], 0, 0, 0, 0))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, MB),
         in_specs=[
             pl.BlockSpec((1, Hkv, group, D), lambda b, j, bt, cl: (b, 0, 0, 0)),
-            pl.BlockSpec((1, 2, P, Hkv, D),
-                         lambda b, j, bt, cl: (bt[b, j], 0, 0, 0, 0)),
+            kv_spec,
         ],
         out_specs=pl.BlockSpec((1, Hkv, group, D),
                                lambda b, j, bt, cl: (b, 0, 0, 0)),

@@ -65,6 +65,18 @@ def main(argv=None):
                     help="shared prefix length in tokens")
     ap.add_argument("--prefix-count", type=int, default=8,
                     help="number of distinct shared prefixes")
+    ap.add_argument("--paged-runner", action="store_true",
+                    help="execute tokens for REAL on a reduced model over "
+                         "the pooled block-first KV cache (batched Pallas "
+                         "paged-attention decode; rotation physically moves "
+                         "pool rows). Timing stays calibrated to --model. "
+                         "The trace is clamped to smoke scale (short "
+                         "prompts/outputs, reduced vocab) so interpret-mode "
+                         "kernels stay fast on CPU.")
+    ap.add_argument("--paged-max-prompt", type=int, default=40,
+                    help="prompt-length clamp under --paged-runner")
+    ap.add_argument("--paged-max-output", type=int, default=8,
+                    help="output-length clamp under --paged-runner")
     ap.add_argument("--hbm-blocks", type=int, default=4000)
     ap.add_argument("--dram-blocks", type=int, default=100000)
     ap.add_argument("--alpha", type=float, default=3.0)
@@ -100,7 +112,8 @@ def main(argv=None):
         block_first_layout=not args.no_block_first,
         batched_transfer_kernel=not args.no_block_first,
         pipeline_overlap=not args.no_pipeline,
-        prefix_cache=(args.prefix_cache == "on"))
+        prefix_cache=(args.prefix_cache == "on"),
+        paged_runner=args.paged_runner)
     hw = HW_PROFILES[args.hw]
     if args.prefix_share is not None:
         reqs = generate_shared_prefix_requests(
@@ -115,14 +128,38 @@ def main(argv=None):
         reqs = generate_requests(args.dataset, args.rps, args.duration,
                                  seed=args.seed)
 
+    runner_cfg = None
+    if args.paged_runner:
+        import dataclasses as _dc
+        import numpy as _np
+        # real execution on CPU: a reduced fp32 model; clamp the trace to
+        # smoke scale and remap token ids into the reduced vocab (prompts
+        # without ids get deterministic synthetic ones)
+        runner_cfg = _dc.replace(cfg.reduced(), dtype="float32")
+        rng = _np.random.default_rng([args.seed, 0xBA9ED])
+        for r in reqs:
+            r.prompt_len = min(r.prompt_len, args.paged_max_prompt)
+            r.output_len = min(r.output_len, args.paged_max_output)
+            if r.sampling is not None:
+                r.sampling = _dc.replace(
+                    r.sampling, max_tokens=r.output_len)
+            if r.prompt_ids is None:
+                r.prompt_ids = [int(x) for x in rng.integers(
+                    1, runner_cfg.vocab_size, r.prompt_len)]
+            else:
+                r.prompt_ids = [1 + (int(x) % (runner_cfg.vocab_size - 1))
+                                for x in r.prompt_ids[:r.prompt_len]]
+
     if args.replicas > 1:
         router = Router(cfg, sv, hw, replicas=args.replicas,
-                        policy=args.router)
+                        policy=args.router, runner_cfg=runner_cfg,
+                        runner_seed=args.seed)
         rep = router.run(reqs)
         stats = router.aggregate_stats()
         cache_counters = router.aggregate_cache_counters()
     else:
-        eng = ServingEngine(cfg, sv, hw)
+        eng = ServingEngine(cfg, sv, hw, runner_cfg=runner_cfg,
+                            runner_seed=args.seed)
         rep = eng.run(reqs)
         stats = eng.stats
         cache_counters = eng.kv.cache_counters()
@@ -138,6 +175,19 @@ def main(argv=None):
                stall_time=round(stats.stall_time, 3),
                prefix_cache=args.prefix_cache,
                prefill_tokens_executed=stats.prefill_tokens)
+    if args.paged_runner:
+        # per-replica executors: sum counters cluster-wide (replicas == 1
+        # degenerates to the single engine's executor)
+        execs = ([rep_core.executor for rep_core in router.replicas]
+                 if args.replicas > 1 else [eng.core.executor])
+        row.update(
+            paged_runner=True,
+            decode_batches=sum(e.decode_batches for e in execs),
+            decode_tokens=sum(e.decode_tokens for e in execs),
+            attn_launches=sum(e.attn_launches for e in execs),
+            kv_copy_launches=sum(e.store.copy_launches for e in execs),
+            kv_rows_moved=sum(e.store.d2h_rows + e.store.h2d_rows
+                              + e.store.d2d_rows for e in execs))
     if args.prefix_cache == "on":
         row.update(cache_counters=cache_counters)
     if args.slo_mix:

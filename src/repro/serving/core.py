@@ -28,7 +28,8 @@ from repro.core.blocktable import OutOfBlocks
 from repro.core.duplexkv import DuplexKV
 from repro.core.types import (FINISH_ABORTED, Request, RequestOutput,
                               RequestState, SamplingParams, resolve_slo_class)
-from repro.serving.executor import BatchPlan, SimExecutor
+from repro.serving.executor import (BatchPlan, Executor, RealExecutorAdapter,
+                                    SimExecutor)
 from repro.serving.outputs import OutputCollector, RequestHandle
 from repro.serving.schedulers import Scheduler, make_scheduler
 
@@ -87,11 +88,11 @@ class AdmissionController:
     """
 
     def __init__(self, kv: DuplexKV, stats: EngineStats, block_size: int,
-                 real_executor=None):
+                 executor: Optional[Executor] = None):
         self.kv = kv
         self.stats = stats
         self.bs = block_size
-        self.real = real_executor
+        self.executor = executor or Executor()   # default: no-op hooks
 
     def _admit_need(self, r: Request, kv_view) -> int:
         """HBM blocks the request must still acquire. With the prefix cache
@@ -120,8 +121,7 @@ class AdmissionController:
             out.preempt_ids.append(r.req_id)
             r.rotate_out()
             self.stats.active_rotations += 1
-            if self.real is not None:
-                self.real.swap_out(r.req_id)
+            self.executor.swap_out(r.req_id)
 
         freed = sum(self._freed_by(r, kv_view) for r in decision.preempted)
         budget = self.kv.hbm_free_blocks + freed
@@ -142,16 +142,14 @@ class AdmissionController:
         out.preempt_ids.append(r.req_id)
         r.rotate_out()
         self.stats.passive_preemptions += 1
-        if self.real is not None:
-            self.real.swap_out(r.req_id)
+        self.executor.swap_out(r.req_id)
 
     def start_prefill(self, r: Request, t: float) -> None:
         r.start_running(t)
 
     def complete_swap_in(self, r: Request, t: float) -> None:
         r.resume(t)
-        if self.real is not None:
-            self.real.swap_in(r.req_id)
+        self.executor.swap_in(r.req_id)
 
 
 class BatchBuilder:
@@ -214,26 +212,50 @@ class EngineCore:
     def __init__(self, cfg: ModelConfig, serving: ServingConfig,
                  hw: HardwareProfile = GH200,
                  scheduler: Optional[Scheduler] = None,
-                 executor: Optional[SimExecutor] = None,
-                 real_executor=None):
+                 executor: Optional[Executor] = None,
+                 real_executor=None,
+                 runner_cfg: Optional[ModelConfig] = None,
+                 runner_seed: int = 0):
         self.cfg = cfg
         self.serving = serving
         self.hw = hw
         self.scheduler = scheduler or make_scheduler(serving.scheduler,
                                                      serving.rotary)
-        self.executor = executor or SimExecutor(cfg, hw)
+        # -- executor resolution: one ``Executor`` serves the whole step().
+        #    * ``real_executor`` (legacy per-request prefill/decode object)
+        #      is wrapped in the protocol adapter, timed by a SimExecutor;
+        #    * ``serving.paged_runner`` builds the batched PagedModelRunner
+        #      (``runner_cfg``: the model it executes — typically a tiny
+        #      ``reduced()`` — while timing stays on ``cfg``);
+        #    * default: pure SimExecutor (tokens are oracle counts).
         self.real = real_executor
+        if real_executor is not None:
+            self.executor: Executor = RealExecutorAdapter(
+                real_executor, executor or SimExecutor(cfg, hw))
+        elif executor is not None:
+            self.executor = executor
+        elif serving.paged_runner:
+            from repro.serving.paged_runner import PagedModelRunner
+            self.executor = PagedModelRunner(
+                runner_cfg or cfg, serving, hw, seed=runner_seed,
+                timing_cfg=cfg)
+        else:
+            self.executor = SimExecutor(cfg, hw)
         self.kv = DuplexKV(cfg, serving, hw)
+        if hasattr(self.executor, "bind"):
+            self.executor.bind(self.kv)   # pool-backed executors attach here
         self.stats = EngineStats()
         self.clock = 0.0
         self._exec_ema = 0.03   # for auto B_xfer sizing
-        # Prefix caching requires content (token ids) and a simulated device;
-        # the RealExecutor keeps dense per-request caches that cannot share
-        # prefixes, so the cache is forced off under it.
-        self._prefix_cache = serving.prefix_cache and real_executor is None
+        # Prefix caching requires block-level KV sharing on the device; the
+        # dense per-request caches of the legacy RealExecutor cannot share,
+        # so the cache is forced off under it. The paged runner CAN — its
+        # cache-hit blocks are genuinely shared pool rows.
+        self._prefix_cache = (serving.prefix_cache
+                              and self.executor.supports_prefix_cache)
         self.admission = AdmissionController(self.kv, self.stats,
                                              serving.block_size,
-                                             real_executor)
+                                             self.executor)
         self.batcher = BatchBuilder(serving, self.kv, self.admission)
         self.active: List[Request] = []
         self._pending: List[Tuple[float, int, Request]] = []   # arrival heap
@@ -320,8 +342,7 @@ class EngineCore:
         # swap-in scheduled for the next iteration simply never reaches the
         # scheduler again (the swap-in is cancelled by removal from `active`)
         self.kv.finish(req_id)
-        if self.real is not None:
-            self.real.drop(req_id)
+        self.executor.drop(req_id)
         r.finish_at(self.clock, reason=FINISH_ABORTED)
         del self._index[req_id]
         self.stats.aborted += 1
@@ -433,6 +454,13 @@ class EngineCore:
                 self.admission.complete_swap_in(r, self.clock)
                 resumed.append(rid)
 
+        # model execution: the executor sees requests in their PRE-commit
+        # state and returns at most one sampled token per request (empty in
+        # sim mode — oracle token accounting needs only the counts below).
+        # Runs after plan_iteration so swap-in/promotion rows have landed in
+        # the physical pool before any kernel reads them.
+        result = self.executor.execute(plan, self._index)
+
         new_count: Dict[int, int] = {}        # req_id -> tokens this iter
         new_ids: Dict[int, List[int]] = {}    # req_id -> their ids (real mode)
 
@@ -448,32 +476,34 @@ class EngineCore:
                 continue
             r.prefill_pos += take
             if r.prefill_done and r.tokens_generated == 0:
-                if self.real is not None and r.prompt_ids is not None:
-                    emit_token(r, self.real.prefill(
-                        r.req_id, r.prompt_ids,
-                        capacity=r.prompt_len + r.output_len + 1))
+                if rid in result.tokens:
+                    emit_token(r, result.tokens[rid])
                 r.record_token(self.clock)    # first token at prefill tail
                 new_count[rid] = new_count.get(rid, 0) + 1
-            self.kv.sync_progress(r.req_id, r.prefill_pos)
+            self.kv.sync_progress(r.req_id, r.prefill_pos,
+                                  written_from=r.prefill_pos - take)
 
         for rid in plan.decode_reqs:
             r = self._by_id(rid)
             if r is None or r.state != RequestState.RUNNING:
                 continue
-            if self.real is not None and r.generated_ids:
-                emit_token(r, self.real.decode(r.req_id, r.generated_ids[-1],
-                                               r.total_len - 1))
+            if rid in result.tokens:
+                emit_token(r, result.tokens[rid])
             r.record_token(self.clock)
             new_count[rid] = new_count.get(rid, 0) + 1
-            self.kv.sync_progress(r.req_id, r.total_len)
+            # the token sampled THIS iteration has no KV yet (it is written
+            # when fed back next iteration), so the physically written
+            # position is total_len - 2 post-commit — the invalidation
+            # anchor for host-copy staleness (see invalidate_dirty_tail)
+            self.kv.sync_progress(r.req_id, r.total_len,
+                                  written_from=max(r.total_len - 2, 0))
 
         finished: List[int] = []
         for r in self.active:
             if r.done and r.state != RequestState.FINISHED:
                 r.finish_at(self.clock)   # reason: "stop" if EOS else "length"
                 self.kv.finish(r.req_id)
-                if self.real is not None:
-                    self.real.drop(r.req_id)
+                self.executor.drop(r.req_id)
                 finished.append(r.req_id)
                 new_count.setdefault(r.req_id, 0)
 

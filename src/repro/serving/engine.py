@@ -39,9 +39,12 @@ class ServingEngine:
                  hw: HardwareProfile = GH200,
                  scheduler: Optional[Scheduler] = None,
                  executor: Optional[SimExecutor] = None,
-                 real_executor=None):
+                 real_executor=None,
+                 runner_cfg: Optional[ModelConfig] = None,
+                 runner_seed: int = 0):
         self.core = EngineCore(cfg, serving, hw, scheduler=scheduler,
-                               executor=executor, real_executor=real_executor)
+                               executor=executor, real_executor=real_executor,
+                               runner_cfg=runner_cfg, runner_seed=runner_seed)
 
     # ------------------------------------------------------------- delegation
     @property

@@ -1,14 +1,27 @@
-"""Executors: model-execution time for one engine iteration.
+"""Executors: model execution for one engine iteration behind ONE protocol.
 
-SimExecutor — roofline cost model on a HardwareProfile (the SLO benchmarks
-run on CPU, so wall-time is simulated around the *real* scheduler/block-table
-code). RealExecutor — actually runs a (tiny) JAX model: used by integration
-tests to prove the engine is lossless under rotation.
+``Executor`` is the single interface ``EngineCore.step()`` consumes: it
+turns a ``BatchPlan`` into per-request next tokens (``execute``), models the
+iteration's device time (``step_time``), and receives request lifecycle
+hooks (``swap_out``/``swap_in``/``drop``) so rotation and aborts reach
+whatever holds per-request device state. Three implementations:
+
+* ``SimExecutor`` — roofline cost model on a HardwareProfile (the SLO
+  benchmarks run on CPU, so wall-time is simulated around the *real*
+  scheduler/block-table code). Emits no tokens.
+* ``RealExecutor`` (+ ``RealExecutorAdapter``) — drives an actual (tiny)
+  JAX model with dense per-request KV caches, one Python call per request:
+  the legacy integration-test path proving the engine is lossless under
+  rotation.
+* ``repro.serving.paged_runner.PagedModelRunner`` — batched execution over
+  a pooled block-first KV buffer addressed by the engine's own block table
+  (the paper's §4.3 design); decode is one batched paged-attention launch
+  per layer per iteration regardless of batch size.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.configs.base import HardwareProfile, ModelConfig
 
@@ -28,7 +41,47 @@ class BatchPlan:
         return not self.decode_reqs and self.prefill_tokens == 0
 
 
-class SimExecutor:
+@dataclasses.dataclass
+class ExecutionResult:
+    """What an ``Executor.execute`` call produced: at most one sampled token
+    per request this iteration (a decode step, or the first token at the
+    tail of a completed prefill). Sim mode emits none — the engine's oracle
+    token accounting proceeds on counts alone."""
+    tokens: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+
+class Executor:
+    """The engine-facing execution protocol (see module docstring).
+
+    ``supports_prefix_cache``: whether KV produced by one request is
+    physically shareable with another (block-level sharing). Dense
+    per-request caches are not; the engine forces the prefix cache off.
+    """
+
+    supports_prefix_cache = True
+
+    def step_time(self, plan: BatchPlan) -> float:
+        raise NotImplementedError
+
+    def execute(self, plan: BatchPlan, requests: Mapping[int, object]
+                ) -> ExecutionResult:
+        """Run the plan's prefill chunks and decodes. ``requests`` maps
+        req_id -> live Request in its PRE-commit state (``prefill_pos`` /
+        ``generated_ids`` not yet advanced for this iteration)."""
+        return ExecutionResult()
+
+    # -- lifecycle hooks (no-ops unless the executor holds per-request state)
+    def swap_out(self, req_id: int) -> None:
+        pass
+
+    def swap_in(self, req_id: int) -> None:
+        pass
+
+    def drop(self, req_id: int) -> None:
+        pass
+
+
+class SimExecutor(Executor):
     def __init__(self, cfg: ModelConfig, hw: HardwareProfile,
                  fixed_overhead_s: float = 0.004):
         self.cfg = cfg
@@ -60,7 +113,8 @@ class RealExecutor:
 
     Used by tests/examples: token streams must be identical with and without
     rotation (rotation moves KV between the device pool and a host-side numpy
-    store — semantically exercising the DuplexKV data path).
+    store — semantically exercising the DuplexKV data path). Wrap in
+    ``RealExecutorAdapter`` to plug into ``EngineCore``.
     """
 
     def __init__(self, cfg: ModelConfig, seed: int = 0):
@@ -84,6 +138,10 @@ class RealExecutor:
 
     def decode(self, req_id: int, token: int, cache_len: int) -> int:
         import jax.numpy as jnp
+        if req_id not in self._caches:
+            raise RuntimeError(
+                f"decode on request {req_id} with no device cache — it was "
+                "swapped out (or dropped) and never swapped back in")
         logits, cache = self.lm.decode_step(
             self.params, self._caches[req_id],
             {"token": jnp.asarray([token], jnp.int32),
@@ -98,17 +156,86 @@ class RealExecutor:
         import numpy as np
         import jax
         cache = self._caches.pop(req_id, None)
-        if cache is not None:   # mid-prefill requests have no cache yet
-            self._host[req_id] = jax.tree.map(lambda x: np.asarray(x), cache)
+        if cache is None:
+            # Mid-prefill requests have no cache yet; that is only a legal
+            # state BEFORE the first token. A cache-less request that has
+            # already generated tokens lost its KV — fail loudly instead of
+            # silently resuming with garbage.
+            if self._tokens.get(req_id):
+                raise RuntimeError(
+                    f"swap_out on request {req_id}: no device cache but "
+                    f"{len(self._tokens[req_id])} generated tokens — its KV "
+                    "state was lost")
+            self._host[req_id] = None   # sentinel: rotated out mid-prefill
+            return
+        self._host[req_id] = jax.tree.map(lambda x: np.asarray(x), cache)
 
     def swap_in(self, req_id: int) -> None:
         import jax.numpy as jnp
         import jax
         host = self._host.pop(req_id, None)
-        if host is not None:
-            self._caches[req_id] = jax.tree.map(jnp.asarray, host)
+        if host is None:
+            # Mid-prefill resume: no KV existed at swap-out, so there is
+            # nothing to restore — prefill has not completed, and the engine
+            # re-runs it before any decode. A token-bearing request in this
+            # state would decode against a missing cache.
+            if self._tokens.get(req_id):
+                raise RuntimeError(
+                    f"swap_in on request {req_id}: resumed without a KV "
+                    "cache after generating tokens")
+            return
+        self._caches[req_id] = jax.tree.map(jnp.asarray, host)
 
     def drop(self, req_id: int) -> None:
         self._caches.pop(req_id, None)
         self._host.pop(req_id, None)
         self._tokens.pop(req_id, None)
+
+
+class RealExecutorAdapter(Executor):
+    """Adapts a per-request real executor (``prefill``/``decode``/``swap_*``
+    /``drop``) to the batched ``Executor`` protocol. Iteration timing comes
+    from a wrapped ``SimExecutor`` (device wall-time stays simulated; only
+    tokens are real). Dense per-request caches cannot share prefix blocks,
+    so ``supports_prefix_cache`` is False — the engine forces the cache off.
+    """
+
+    supports_prefix_cache = False
+
+    def __init__(self, real, sim: SimExecutor):
+        self.real = real
+        self.sim = sim
+
+    def step_time(self, plan: BatchPlan) -> float:
+        return self.sim.step_time(plan)
+
+    def execute(self, plan: BatchPlan, requests) -> ExecutionResult:
+        from repro.core.types import RequestState
+        out = ExecutionResult()
+        for rid, take in plan.prefill_chunks:
+            r = requests.get(rid)
+            if r is None or r.prompt_ids is None:
+                continue
+            # legacy semantics: dense prefill of the WHOLE prompt runs once,
+            # at the iteration whose chunk completes it
+            if r.prefill_pos + take >= r.prompt_len and r.tokens_generated == 0:
+                out.tokens[rid] = self.real.prefill(
+                    rid, r.prompt_ids,
+                    capacity=r.prompt_len + r.output_len + 1)
+        for rid in plan.decode_reqs:
+            r = requests.get(rid)
+            if r is None or r.state != RequestState.RUNNING:
+                continue
+            if r.generated_ids:
+                out.tokens[rid] = self.real.decode(
+                    rid, r.generated_ids[-1], r.total_len - 1)
+        return out
+
+    def swap_out(self, req_id: int) -> None:
+        self.real.swap_out(req_id)
+
+    def swap_in(self, req_id: int) -> None:
+        self.real.swap_in(req_id)
+
+    def drop(self, req_id: int) -> None:
+        self.real.drop(req_id)

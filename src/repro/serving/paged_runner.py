@@ -1,0 +1,451 @@
+"""PagedModelRunner: batched real execution over a pooled block-first KV
+cache, wired to the Pallas kernels and DuplexKV (paper §4.3).
+
+The engine's logical block decisions ARE the physical layout here: one
+pooled ``(rows, L, 2, P, Hkv, D)`` device buffer holds every layer of one
+logical KV block contiguously per row (block-first, segments_per_block==1),
+and rows are addressed by the ``TwoTierBlockTable``'s ``hbm_slot``s — the
+same integers the scheduler budgets with. Consequences:
+
+* **Decode** is ONE batched ``paged_attention_tpu`` launch per layer per
+  iteration (scalar-prefetched block tables do the indirection), not N
+  Python-loop model calls — the launch count is independent of batch size.
+* **Chunked prefill** scatters each chunk's K/V into the request's assigned
+  rows and attends over the gathered block context, so prefill resumes
+  mid-prompt after a rotation with no recompute.
+* **Rotation and prefix-cache demotion are physical row movement**: every
+  ``TransferDesc`` the DuplexKV times is also executed by ``PagedKVStore``
+  — a batched ``kv_copy_tpu`` launch gathers the rows into a contiguous
+  staging region (the cudaMemcpyBatchAsync analogue), then one contiguous
+  host transfer moves them to/from a numpy DRAM tier.
+* **Prefix-cache + real execution compose** (PR 3's incompatibility): a
+  cache-hit block is a genuinely shared pool row — a new request's block
+  table simply points at it, and attention reads the KV another request
+  prefilled (RoPE is position-absolute, so shared prefixes agree).
+
+Pallas kernels run in interpret mode under ``jax.jit`` on CPU (tier-1 CI);
+on a real TPU the same calls lower to Mosaic. See DESIGN.md §Execution
+layer for the faithfulness discussion.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import (GH200, HardwareProfile, ModelConfig,
+                                ServingConfig)
+from repro.serving.executor import ExecutionResult, Executor, SimExecutor
+
+
+def _pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1): bounds jit retraces to O(log)."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class PagedKVStore:
+    """Physical two-tier KV storage behind the block table's slot numbers.
+
+    Device tier: one jnp pool of ``num_hbm_blocks`` rows plus a staging
+    region (``staging`` rows) and one trash row (scatter target for padded
+    batch lanes). Host tier: a numpy dict keyed by DRAM slot. Implements
+    the DuplexKV data-backend protocol (``run_d2d``/``run_d2h``/
+    ``run_h2d``): each direction is a batched ``kv_copy_tpu`` launch
+    through staging plus one contiguous host copy.
+    """
+
+    def __init__(self, cfg: ModelConfig, serving: ServingConfig, dtype,
+                 *, staging: int = 64, interpret: bool = True):
+        import jax
+        import jax.numpy as jnp
+        if staging < 1 or staging & (staging - 1):
+            # chunk padding rounds up to a power of two; a non-pow2 staging
+            # region would let a padded upload spill past it and
+            # dynamic_update_slice would clamp — silently overwriting live
+            # block rows
+            raise ValueError(f"staging must be a power of two, got {staging}")
+        L = cfg.num_layers
+        P = serving.block_size
+        self.nb = serving.num_hbm_blocks
+        self.staging = staging
+        self.trash_row = self.nb + staging
+        self.row_shape = (L, 2, P, cfg.num_kv_heads, cfg.head_dim)
+        self.pool = jnp.zeros((self.nb + staging + 1,) + self.row_shape, dtype)
+        self.host: Dict[int, np.ndarray] = {}      # dram_slot -> row array
+        self.interpret = interpret
+        # counters (benchmarks / tests)
+        self.copy_launches = 0
+        self.d2d_rows = 0
+        self.d2h_rows = 0
+        self.h2d_rows = 0
+
+        from repro.kernels.kv_copy import kv_copy_tpu
+
+        def _copy(pool, src, dst):
+            flat = pool.reshape(pool.shape[0], -1)
+            out = kv_copy_tpu(flat, src, dst, interpret=interpret)
+            return out.reshape(pool.shape)
+
+        def _upload(pool, rows):   # contiguous write into the staging region
+            idx = (self.nb,) + (0,) * (pool.ndim - 1)
+            return jax.lax.dynamic_update_slice(pool, rows.astype(pool.dtype),
+                                                idx)
+
+        # donate the pool: the caller always rebinds to the returned array,
+        # and without donation every launch would deep-copy the whole pool,
+        # defeating kv_copy_tpu's input_output_aliases (backends that cannot
+        # donate just ignore the hint)
+        self._jit_copy = jax.jit(_copy, donate_argnums=(0,))
+        self._jit_upload = jax.jit(_upload, donate_argnums=(0,))
+
+    def _copy_rows(self, src: Sequence[int], dst: Sequence[int]) -> None:
+        """One batched row-copy launch: pool[dst[i]] = pool[src[i]].
+        Padded to a power of two with no-op descriptors (src < 0)."""
+        import jax.numpy as jnp
+        n = len(src)
+        np2 = _pow2(n)
+        s = np.full(np2, -1, np.int32)
+        d = np.zeros(np2, np.int32)
+        s[:n], d[:n] = src, dst
+        self.pool = self._jit_copy(self.pool, jnp.asarray(s), jnp.asarray(d))
+        self.copy_launches += 1
+
+    # -- DuplexKV data-backend protocol ------------------------------------
+    def run_d2d(self, pairs: Sequence[Tuple[int, int]]) -> None:
+        """Intra-pool row copies (copy-on-write forks)."""
+        if not pairs:
+            return
+        self._copy_rows([p[0] for p in pairs], [p[1] for p in pairs])
+        self.d2d_rows += len(pairs)
+
+    def run_d2h(self, descs) -> None:
+        """Device rows -> host tier: batched gather into staging (one
+        ``kv_copy_tpu`` launch), then ONE contiguous device->host copy."""
+        for i in range(0, len(descs), self.staging):
+            chunk = descs[i:i + self.staging]
+            n = len(chunk)
+            self._copy_rows([d.src_slot for d in chunk],
+                            list(range(self.nb, self.nb + n)))
+            data = np.asarray(self.pool[self.nb:self.nb + n])
+            for j, d in enumerate(chunk):
+                self.host[d.dst_slot] = np.array(data[j])
+            self.d2h_rows += n
+
+    def run_h2d(self, descs) -> None:
+        """Host tier -> device rows: one contiguous host->device upload into
+        staging, then a batched ``kv_copy_tpu`` scatter into place."""
+        import jax.numpy as jnp
+        for i in range(0, len(descs), self.staging):
+            chunk = descs[i:i + self.staging]
+            n = len(chunk)
+            rows = []
+            for d in chunk:
+                row = self.host.get(d.src_slot)
+                if row is None:
+                    raise RuntimeError(
+                        f"h2d for block {d.block_id}: DRAM slot "
+                        f"{d.src_slot} holds no data (lost copy)")
+                rows.append(row)
+            np2 = _pow2(n)
+            buf = np.zeros((np2,) + self.row_shape, rows[0].dtype)
+            buf[:n] = np.stack(rows)
+            self.pool = self._jit_upload(self.pool, jnp.asarray(buf))
+            self._copy_rows(list(range(self.nb, self.nb + n)),
+                            [d.dst_slot for d in chunk])
+            self.h2d_rows += n
+
+
+class PagedModelRunner(Executor):
+    """Batched real execution against the pooled block-first KV cache.
+
+    ``model_cfg`` is the config actually executed (a ``reduced()`` tiny LM
+    on CPU); iteration wall-time still comes from a ``SimExecutor`` — pass
+    ``timing_cfg`` to keep timing calibrated to the full-size model while
+    executing the reduced one. The runner binds to the engine's DuplexKV
+    (``bind``), sizing the device pool to the block table and attaching its
+    ``PagedKVStore`` as the table's physical data backend.
+    """
+
+    supports_prefix_cache = True
+
+    def __init__(self, model_cfg: ModelConfig, serving: ServingConfig,
+                 hw: HardwareProfile = GH200, *, seed: int = 0,
+                 sim: Optional[SimExecutor] = None,
+                 timing_cfg: Optional[ModelConfig] = None,
+                 interpret: bool = True):
+        import jax
+        from repro.models.blocks import make_layer_spec
+        from repro.models.common import dtype_of
+        from repro.models.lm import LM
+
+        unsupported = []
+        if model_cfg.num_encoder_layers or model_cfg.frontend.kind != "none":
+            unsupported.append("encoder/frontend stacks")
+        for i in range(model_cfg.num_layers):
+            sp = make_layer_spec(model_cfg, i)
+            if sp.mixer != "attn" or not sp.is_global or sp.has_cross \
+                    or sp.ffn != "dense":
+                unsupported.append(f"layer {i} ({sp.mixer}/{sp.ffn})")
+                break
+        if unsupported:
+            raise ValueError(
+                "PagedModelRunner supports uniform dense-attention decoder "
+                f"configs only; {model_cfg.name} has " + ", ".join(unsupported))
+
+        self.cfg = model_cfg
+        self.serving = serving
+        self.sim = sim or SimExecutor(timing_cfg or model_cfg, hw)
+        self.interpret = interpret
+        self.dtype = dtype_of(model_cfg.dtype)
+        self.lm = LM(model_cfg)
+        self.params = self.lm.init(jax.random.PRNGKey(seed))
+        self._layers = self._flatten_layers()
+        self._head = {k: self.params[k] for k in
+                      ("embed", "final_norm") if k in self.params}
+        if "lm_head" in self.params:
+            self._head["lm_head"] = self.params["lm_head"]
+        self.store: Optional[PagedKVStore] = None
+        self.kv = None
+        # pool (arg 2 after layers/head) is donated: rebound on every return
+        self._jit_decode = jax.jit(self._decode_impl, donate_argnums=(2,))
+        self._jit_prefill = jax.jit(self._prefill_impl, donate_argnums=(2,))
+        # counters (benchmarks / tests): decode launch count is per-layer,
+        # INDEPENDENT of batch size — the whole point of the batched path
+        self.decode_batches = 0
+        self.decode_tokens = 0
+        self.attn_launches = 0
+        self.prefill_chunks_run = 0
+
+    # ------------------------------------------------------------- binding
+    def bind(self, kv) -> None:
+        """Attach to the engine's DuplexKV: allocate the device pool sized
+        to its block table and register as the physical data backend."""
+        self.kv = kv
+        self.store = PagedKVStore(self.cfg, self.serving, self.dtype,
+                                  interpret=self.interpret)
+        kv.attach_data_backend(self.store)
+
+    def _flatten_layers(self) -> List[dict]:
+        """Per-layer param dicts in execution order (segment -> repeat ->
+        pattern position), unstacking scan-over-layers stacks."""
+        import jax
+        out = []
+        for si, seg in enumerate(self.lm.program):
+            p_seg = self.params["segments"][si]
+            for rep in range(seg.repeat):
+                for pi in range(len(seg.pattern)):
+                    p = p_seg[pi]
+                    if seg.repeat > 1:
+                        p = jax.tree.map(lambda a, r=rep: a[r], p)
+                    out.append(p)
+        return out
+
+    # ------------------------------------------------------ executor protocol
+    def step_time(self, plan) -> float:
+        return self.sim.step_time(plan)
+
+    def execute(self, plan, requests) -> ExecutionResult:
+        from repro.core.types import RequestState
+        if self.store is None:
+            raise RuntimeError("PagedModelRunner.bind(kv) was never called")
+        out = ExecutionResult()
+        for rid, take in plan.prefill_chunks:
+            r = requests.get(rid)
+            if r is None or r.prompt_ids is None:
+                continue
+            tok = self._run_prefill_chunk(r, take)
+            if tok is not None:
+                out.tokens[rid] = tok
+        dec = []
+        for rid in plan.decode_reqs:
+            r = requests.get(rid)
+            if (r is None or r.state != RequestState.RUNNING
+                    or not r.generated_ids):
+                continue
+            dec.append(r)
+        if dec:
+            out.tokens.update(self._run_decode_batch(dec))
+        return out
+
+    # rotation data movement rides the DuplexKV transfer descriptors (the
+    # PagedKVStore backend); there is no per-request device state to move
+    def swap_out(self, req_id: int) -> None:
+        pass
+
+    def swap_in(self, req_id: int) -> None:
+        pass
+
+    def drop(self, req_id: int) -> None:
+        pass
+
+    # ---------------------------------------------------------- device work
+    def _rows(self, req_id: int) -> List[int]:
+        """HBM pool rows of the request's blocks, in position order — the
+        physical block table handed to the kernels."""
+        from repro.core.blocktable import BlockLoc
+        rows = []
+        for b in self.kv.table.blocks_of(req_id):
+            if b.hbm_slot is None or b.loc == BlockLoc.DRAM:
+                raise RuntimeError(
+                    f"block {b.block_id} of scheduled request {req_id} is "
+                    f"not HBM-resident ({b.loc})")
+            rows.append(b.hbm_slot)
+        return rows
+
+    def _run_prefill_chunk(self, r, take: int) -> Optional[int]:
+        import jax.numpy as jnp
+        P = self.serving.block_size
+        start = r.prefill_pos
+        take = min(take, r.prompt_len - start)
+        if take <= 0:
+            return None
+        ids = r.prompt_ids[start:start + take]
+        rows = self._rows(r.req_id)
+        nb_ctx = _cdiv(start + take, P)
+        if len(rows) < nb_ctx:
+            raise RuntimeError(
+                f"req {r.req_id}: {len(rows)} blocks assigned, prefill "
+                f"needs {nb_ctx}")
+        tp, mbp = _pow2(take), _pow2(nb_ctx)
+        ids_p = np.zeros(tp, np.int32)
+        ids_p[:take] = ids
+        rows_p = np.full(mbp, self.store.trash_row, np.int32)
+        rows_p[:min(len(rows), mbp)] = rows[:mbp]
+        self.store.pool, tok = self._jit_prefill(
+            self._layers, self._head, self.store.pool,
+            jnp.asarray(ids_p), jnp.asarray(start, jnp.int32),
+            jnp.asarray(take, jnp.int32), jnp.asarray(rows_p))
+        self.prefill_chunks_run += 1
+        if start + take >= r.prompt_len and r.tokens_generated == 0:
+            return int(tok)
+        return None
+
+    def _run_decode_batch(self, dec) -> Dict[int, int]:
+        import jax.numpy as jnp
+        P = self.serving.block_size
+        cls = [r.total_len - 1 for r in dec]
+        rows = [self._rows(r.req_id) for r in dec]
+        for r, cl, rw in zip(dec, cls, rows):
+            if len(rw) < _cdiv(cl + 1, P):
+                raise RuntimeError(
+                    f"req {r.req_id}: {len(rw)} blocks assigned, decode at "
+                    f"context {cl + 1} needs {_cdiv(cl + 1, P)}")
+        mbp = _pow2(max(_cdiv(cl + 1, P) for cl in cls))
+        bp = _pow2(len(dec))
+        toks = np.zeros(bp, np.int32)
+        cl_p = np.zeros(bp, np.int32)
+        bt = np.full((bp, mbp), self.store.trash_row, np.int32)
+        for i, r in enumerate(dec):
+            toks[i] = r.generated_ids[-1]
+            cl_p[i] = cls[i]
+            k = min(len(rows[i]), mbp)
+            bt[i, :k] = rows[i][:k]
+        self.store.pool, nxt = self._jit_decode(
+            self._layers, self._head, self.store.pool,
+            jnp.asarray(toks), jnp.asarray(bt), jnp.asarray(cl_p))
+        self.decode_batches += 1
+        self.decode_tokens += len(dec)
+        self.attn_launches += len(self._layers)
+        nxt = np.asarray(nxt)
+        return {r.req_id: int(nxt[i]) for i, r in enumerate(dec)}
+
+    # ------------------------------------------------------- jitted kernels
+    def _logits(self, head, h):
+        import jax.numpy as jnp
+        from repro.models.common import rms_norm
+        h = rms_norm(h, head["final_norm"], self.cfg.rms_eps)
+        if self.cfg.tie_embeddings:
+            return jnp.einsum("...d,vd->...v", h, head["embed"])
+        return jnp.einsum("...d,dv->...v", h, head["lm_head"])
+
+    def _decode_impl(self, layers, head, pool, toks, bt, cl):
+        """One batched decode iteration. toks/cl: (B,); bt: (B, MB) pool
+        rows (trash row on padded lanes/slots). Per layer: scatter the new
+        token's K/V into the tail block row, then one paged-attention
+        launch over the whole batch."""
+        import jax.numpy as jnp
+        from repro.kernels.paged_attention import paged_attention_tpu
+        from repro.models.common import apply_rope, rms_norm, swiglu
+        cfg = self.cfg
+        P = self.serving.block_size
+        MB = bt.shape[1]
+        x = jnp.take(head["embed"], toks, axis=0)            # (B, d)
+        pos = cl[:, None]                                    # (B, 1)
+        blk = jnp.clip(cl // P, 0, MB - 1)
+        wrow = jnp.take_along_axis(bt, blk[:, None], axis=1)[:, 0]
+        woff = cl % P
+        zeros, ones = jnp.zeros_like(wrow), jnp.ones_like(wrow)
+        for li, p in enumerate(layers):
+            h = rms_norm(x[:, None], p["ln1"], cfg.rms_eps)  # (B, 1, d)
+            q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+            lrow = jnp.full_like(wrow, li)
+            pool = pool.at[wrow, lrow, zeros, woff].set(
+                k[:, 0].astype(pool.dtype))
+            pool = pool.at[wrow, lrow, ones, woff].set(
+                v[:, 0].astype(pool.dtype))
+            out = paged_attention_tpu(q[:, 0], pool, bt, cl + 1, layer=li,
+                                      interpret=self.interpret)
+            x = x + jnp.einsum("bhk,hkd->bd", out, p["wo"])
+            h2 = rms_norm(x[:, None], p["ln2"], cfg.rms_eps)
+            x = x + swiglu(h2, p["w_gate"], p["w_up"], p["w_down"])[:, 0]
+        logits = self._logits(head, x)
+        return pool, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _prefill_impl(self, layers, head, pool, ids, start, nvalid, bt):
+        """One prefill chunk for one request. ids: (T,) padded chunk token
+        ids; start: chunk's absolute position; nvalid: real chunk length;
+        bt: (MB,) the request's pool rows. K/V scatter into assigned rows,
+        attention over the gathered block context (earlier chunks and
+        shared cache-hit blocks included). Returns the next-token argmax at
+        the chunk tail (meaningful only when the chunk completes the
+        prompt)."""
+        import jax
+        import jax.numpy as jnp
+        from repro.models.attention import flash_attention
+        from repro.models.common import apply_rope, rms_norm, swiglu
+        cfg = self.cfg
+        P = self.serving.block_size
+        T = ids.shape[0]
+        MB = bt.shape[0]
+        x = jnp.take(head["embed"], ids, axis=0)[None]       # (1, T, d)
+        tpos = start + jnp.arange(T)
+        positions = tpos[None]
+        valid = jnp.arange(T) < nvalid
+        blk = jnp.clip(tpos // P, 0, MB - 1)
+        wrow = jnp.where(valid, bt[blk], self.store.trash_row)
+        woff = tpos % P
+        zeros, ones = jnp.zeros_like(wrow), jnp.ones_like(wrow)
+        for li, p in enumerate(layers):
+            h = rms_norm(x, p["ln1"], cfg.rms_eps)
+            q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            lrow = jnp.full_like(wrow, li)
+            pool = pool.at[wrow, lrow, zeros, woff].set(
+                k[0].astype(pool.dtype))
+            pool = pool.at[wrow, lrow, ones, woff].set(
+                v[0].astype(pool.dtype))
+            k_ctx = pool[bt, li, 0].reshape(1, MB * P, cfg.num_kv_heads,
+                                            cfg.head_dim).astype(k.dtype)
+            v_ctx = pool[bt, li, 1].reshape(1, MB * P, cfg.num_kv_heads,
+                                            cfg.head_dim).astype(v.dtype)
+            out = flash_attention(q, k_ctx, v_ctx, causal=True,
+                                  q_offset=start)
+            x = x + jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+            h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+            x = x + swiglu(h2, p["w_gate"], p["w_up"], p["w_down"])
+        h_last = jax.lax.dynamic_index_in_dim(x[0], nvalid - 1, axis=0,
+                                              keepdims=False)
+        logits = self._logits(head, h_last)
+        return pool, jnp.argmax(logits, axis=-1).astype(jnp.int32)

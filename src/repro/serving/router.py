@@ -97,11 +97,15 @@ class ReplicaReport:
 class Router:
     def __init__(self, cfg: ModelConfig, serving: ServingConfig,
                  hw: HardwareProfile = GH200, *, replicas: int = 2,
-                 policy: str = "least-loaded"):
+                 policy: str = "least-loaded",
+                 runner_cfg: Optional[ModelConfig] = None,
+                 runner_seed: int = 0):
         if replicas < 1:
             raise ValueError("need at least one replica")
+        # each replica owns its executor (paged runners: independent pools)
         self.replicas: List[EngineCore] = [
-            EngineCore(cfg, serving, hw) for _ in range(replicas)]
+            EngineCore(cfg, serving, hw, runner_cfg=runner_cfg,
+                       runner_seed=runner_seed) for _ in range(replicas)]
         self.policy = make_policy(policy)
         self._owner: Dict[int, int] = {}   # req_id -> replica index
         self._next_req_id = 0              # cluster-unique ids (handle path)

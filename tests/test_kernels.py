@@ -82,6 +82,22 @@ def test_paged_attention_matches_dense_flash():
     np.testing.assert_allclose(np.asarray(out), np.asarray(want2), atol=1e-5)
 
 
+def test_paged_attention_layered_pool():
+    """layer= addresses a (NB, L, 2, P, Hkv, D) multi-layer pool: each layer
+    slice must match the flat-pool kernel on that slice."""
+    B, H, Hkv, D, P, NB, MB, L = 2, 4, 2, 16, 8, 12, 3, 3
+    q = jnp.asarray(RNG.standard_normal((B, H, D)), jnp.float32)
+    pool = jnp.asarray(RNG.standard_normal((NB, L, 2, P, Hkv, D)),
+                       jnp.float32)
+    bt = jnp.asarray(RNG.permutation(NB)[:B * MB].reshape(B, MB), jnp.int32)
+    cl = jnp.asarray(RNG.integers(1, MB * P + 1, B), jnp.int32)
+    for l in range(L):
+        out = paged_attention_tpu(q, pool, bt, cl, layer=l)
+        want = ref.paged_attention_ref(q, pool[:, l], bt, cl)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
 @pytest.mark.parametrize("NB,F,N", [(10, 24, 4), (6, 128, 6), (32, 64, 1)])
 def test_kv_copy_sweep(NB, F, N, dtype):
