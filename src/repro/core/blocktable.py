@@ -84,6 +84,21 @@ class TransferDesc:
     segments: int
 
 
+@dataclasses.dataclass(frozen=True)
+class ExportedBlockMeta:
+    """One block of a request leaving this table in a cross-replica
+    migration (serving/disagg.py). ``src_dram_slot`` keys the host payload
+    in the *source* store; ``moved`` says whether the source fully freed the
+    block (the payload travels zero-copy) or retained it (live sharers or
+    cache retention — the payload is handed off by reference)."""
+    position: int              # index in the request's block list
+    hash: Optional[int]        # chained content hash (full prompt blocks)
+    synced: bool
+    src_dram_slot: int
+    nbytes: int
+    moved: bool
+
+
 @dataclasses.dataclass
 class KVView:
     """Per-iteration residency snapshot handed to the scheduler so its block
@@ -139,6 +154,11 @@ class TwoTierBlockTable:
         self.retained_blocks = 0       # releases that entered the cache
         self.demoted_blocks = 0        # cached HBM copies dropped (kept DRAM)
         self.evicted_blocks = 0        # cached blocks fully evicted
+        # cross-replica migration stats (serving/disagg.py)
+        self.migrate_d2h_blocks = 0    # blocks that needed a fresh D2H
+        self.exported_blocks = 0       # blocks handed off to another table
+        self.imported_blocks = 0       # blocks adopted from another table
+        self.import_shared_blocks = 0  # imports served by an existing hash hit
 
     # -- capacity -------------------------------------------------------------
     @property
@@ -391,7 +411,19 @@ class TwoTierBlockTable:
             return self._dram_free.pop()
         return None
 
-    def _evict_dram_block(self) -> bool:
+    def evictable_dram(self) -> int:
+        """Refcount-0 cached blocks whose DRAM slot could be reclaimed now —
+        the same eligibility rule ``_evict_dram_block`` applies (capacity
+        probes like ``DuplexKV.can_import`` must see what eviction can
+        actually deliver)."""
+        if not self.prefix_cache:
+            return 0
+        return sum(1 for bid in self._cached_lru
+                   if self._blocks[bid].loc in (BlockLoc.DRAM, BlockLoc.BOTH)
+                   and not self._blocks[bid].d2h_inflight
+                   and not self._blocks[bid].h2d_inflight)
+
+    def _evict_dram_block(self, exclude: Set[int] = frozenset()) -> bool:
         """Free one DRAM slot from the cache: DRAM-only entries first (they
         die entirely), then BOTH entries (which keep their HBM copy)."""
         if not self.prefix_cache:
@@ -399,7 +431,7 @@ class TwoTierBlockTable:
         for dram_only in (True, False):
             for bid in list(self._cached_lru):
                 b = self._blocks[bid]
-                if b.d2h_inflight or b.h2d_inflight:
+                if bid in exclude or b.d2h_inflight or b.h2d_inflight:
                     continue
                 if dram_only and b.loc == BlockLoc.DRAM:
                     self._drop_cached(b)
@@ -541,6 +573,141 @@ class TwoTierBlockTable:
             if b.h2d_inflight:
                 b.h2d_inflight = False
                 b.loc = BlockLoc.BOTH   # DRAM copy retained (free re-preempt)
+
+    # -- cross-replica migration (export / import) --------------------------------
+    def migrate_out(self, req_id: int) -> List[TransferDesc]:
+        """D2H descriptors that give EVERY block of the request a DRAM copy
+        — the first half of a cross-replica handoff. Blocks already
+        ``BOTH``/``DRAM`` (eager demotion, earlier rotations) need no
+        transfer: that is the eager-rotation dividend the disaggregation
+        design banks on. Unlike ``preempt``, shared (refcount > 1) blocks
+        are copied too — the target replica needs their data while the
+        source keeps serving its other referents. All-or-nothing on DRAM
+        capacity: a mid-loop slot failure rolls back and raises."""
+        descs: List[TransferDesc] = []
+        for bid in self._by_req.get(req_id, []):
+            b = self._blocks[bid]
+            if b.loc in (BlockLoc.DRAM, BlockLoc.BOTH):
+                continue               # host copy already exists
+            if b.d2h_inflight or b.h2d_inflight:
+                # migrations run between engine iterations; sim transfers
+                # complete within plan_iteration, so an in-flight flag here
+                # means the caller broke the ordering contract
+                raise RuntimeError(
+                    f"migrate_out({req_id}): block {bid} has a transfer in "
+                    f"flight")
+            slot = self._take_dram_slot()
+            if slot is None:
+                for d in descs:        # roll back: nothing moved yet
+                    rb = self._blocks[d.block_id]
+                    self._dram_free.append(rb.dram_slot)
+                    rb.dram_slot = None
+                    rb.d2h_inflight = False
+                    self.migrate_d2h_blocks -= 1
+                raise OutOfBlocks("DRAM exhausted during migration export")
+            b.dram_slot = slot
+            b.d2h_inflight = True
+            descs.append(self._desc(b, "d2h"))
+            self.migrate_d2h_blocks += 1
+        return descs
+
+    def complete_migrate_out(self, req_id: int) -> None:
+        """All migration D2H landed: every block of the request is now
+        host-resident (``BOTH`` keeps the HBM copy — live sharers and the
+        cache may still read it)."""
+        for bid in self._by_req.get(req_id, []):
+            b = self._blocks[bid]
+            b.d2h_inflight = False
+            if b.loc == BlockLoc.HBM and b.dram_slot is not None:
+                b.loc = BlockLoc.BOTH
+                b.synced = True
+                self._mut += 1
+
+    def export_request(self, req_id: int) -> List[ExportedBlockMeta]:
+        """Hand the request's blocks off to another table: returns ordered
+        metadata describing each block, then releases the request's
+        references here (decref-and-retain — shared prefixes and
+        content-addressed cache entries stay behind for the source's own
+        traffic). Precondition: ``complete_migrate_out`` ran, so every block
+        has a DRAM copy. ``moved`` is derived from the release's actual
+        outcome (the block no longer exists here), never predicted: a block
+        the source freed travels zero-copy (the caller pops its host
+        payload); a retained one (live sharers or cache retention) is shared
+        by reference."""
+        staged = []                      # (bid, position, hash, synced, slot)
+        for pos, bid in enumerate(self._by_req.get(req_id, [])):
+            b = self._blocks[bid]
+            if b.dram_slot is None or b.loc not in (BlockLoc.DRAM,
+                                                    BlockLoc.BOTH):
+                raise RuntimeError(
+                    f"export_request({req_id}): block {bid} has no DRAM "
+                    f"copy ({b.loc}) — run migrate_out first")
+            staged.append((bid, pos, b.hash, b.synced, b.dram_slot))
+        self.release_request(req_id)
+        metas = [ExportedBlockMeta(
+            position=pos, hash=h, synced=synced, src_dram_slot=slot,
+            nbytes=self.block_bytes, moved=bid not in self._blocks)
+            for bid, pos, h, synced, slot in staged]
+        self.exported_blocks += len(metas)
+        return metas
+
+    def import_request(self, req_id: int, metas: Sequence[ExportedBlockMeta]
+                       ) -> Tuple[List[Block], List[Tuple[int, Block]]]:
+        """Adopt a migrated request's blocks into THIS table on the DRAM
+        tier. A content-addressed hit on an existing synced block shares it
+        instead of duplicating (cross-replica prefix dedup — migrated shared
+        prefixes stay shared); every other block becomes a new DRAM-resident
+        block whose payload the caller installs. Returns ``(shared,
+        created)`` where ``created`` pairs each new block with the index of
+        its meta (payload lookup). All-or-nothing: capacity is secured (DRAM
+        cache evictions included) before any state mutates."""
+        if req_id in self._by_req:
+            raise ValueError(f"import_request: {req_id} already has blocks")
+        plan: List[Tuple[int, Optional[int]]] = []   # (meta idx, share bid)
+        n_alloc = 0
+        for i, m in enumerate(metas):
+            bid = (self._hash_index.get(m.hash)
+                   if m.hash is not None else None)
+            tb = self._blocks.get(bid) if bid is not None else None
+            if (tb is not None and tb.synced and not tb.d2h_inflight
+                    and not tb.h2d_inflight):
+                plan.append((i, bid))
+            else:
+                plan.append((i, None))
+                n_alloc += 1
+        # secure DRAM capacity up front (evicting cold cache entries is
+        # allowed to fund the import, but never the blocks this import will
+        # share) so the loop below cannot fail midway
+        planned = {bid for _, bid in plan if bid is not None}
+        while len(self._dram_free) < n_alloc:
+            if not self._evict_dram_block(exclude=planned):
+                raise OutOfBlocks(
+                    f"DRAM exhausted during migration import: need {n_alloc}"
+                    f" slots, have {len(self._dram_free)}")
+        shared: List[Block] = []
+        created: List[Tuple[int, Block]] = []
+        for i, share_bid in plan:
+            m = metas[i]
+            if share_bid is not None and share_bid in self._blocks:
+                tb = self._blocks[share_bid]
+                self._ref_block(req_id, tb)
+                self.cache_hit_blocks += 1
+                self.import_shared_blocks += 1
+                shared.append(tb)
+                continue
+            b = Block(self._next_id,
+                      len(self._by_req.get(req_id, [])), BlockLoc.DRAM,
+                      ref_ids={req_id}, synced=m.synced, hash=m.hash,
+                      dram_slot=self._dram_free.pop())
+            self._next_id += 1
+            self._blocks[b.block_id] = b
+            self._by_req.setdefault(req_id, []).append(b.block_id)
+            if self.prefix_cache and m.hash is not None:
+                self._hash_index.setdefault(m.hash, b.block_id)
+            self._touch(b)
+            created.append((i, b))
+        self.imported_blocks += len(created)
+        return shared, created
 
     # -- release (decref-and-retain) ---------------------------------------------
     def release_request(self, req_id: int) -> None:

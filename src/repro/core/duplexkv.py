@@ -24,7 +24,8 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.configs.base import HardwareProfile, ModelConfig, ServingConfig
-from repro.core.blocktable import (KVView, OutOfBlocks, TransferDesc,
+from repro.core.blocktable import (BlockLoc, ExportedBlockMeta, KVView,
+                                   OutOfBlocks, TransferDesc,
                                    TwoTierBlockTable)
 from repro.core.transfer import TransferEngine, TransferStats, engine_for_flags
 
@@ -66,6 +67,25 @@ def block_bytes_of(cfg: ModelConfig, block_size: int) -> Tuple[int, int]:
                  * (d_in + 2 * s.state_dim)) * 2 * cfg.num_layers
         return state, cfg.num_layers
     return per_token * block_size, n_seg
+
+
+@dataclasses.dataclass
+class MigrationExport:
+    """A request's KV leaving this replica for another one (disaggregated
+    prefill/decode handoff, serving/disagg.py). ``payloads`` aligns with
+    ``metas``: the host-tier row arrays in real (paged-runner) mode, all
+    ``None`` in sim mode. ``stats`` times the fresh D2H the export needed —
+    blocks the eager-demotion path already copied host-side ride for free."""
+    req_id: int
+    metas: List[ExportedBlockMeta]
+    payloads: List[Optional[object]]
+    chain: Optional[List[int]]          # prefix hash chain (target re-registers)
+    stats: TransferStats
+    d2h_blocks: int                     # blocks that needed a fresh D2H
+
+    @property
+    def nbytes(self) -> int:
+        return sum(m.nbytes for m in self.metas)
 
 
 @dataclasses.dataclass
@@ -168,6 +188,79 @@ class DuplexKV:
 
     def releasable_hbm(self, req_id: int) -> int:
         return self.table.releasable_hbm_blocks_of(req_id)
+
+    # -- cross-replica migration ----------------------------------------------
+    def can_export(self, req_id: int) -> bool:
+        """Conservative capacity probe: enough free DRAM slots for the
+        blocks a ``migrate_export`` would still have to demote."""
+        need = sum(1 for b in self.table.blocks_of(req_id)
+                   if b.loc == BlockLoc.HBM)
+        return self.table.dram_free >= need
+
+    def can_import(self, n_blocks: int) -> bool:
+        """Capacity probe for an import of ``n_blocks``: free DRAM slots
+        plus evictable DRAM-resident cache entries (hash sharing can only
+        reduce the true demand)."""
+        t = self.table
+        return (t.dram_free >= n_blocks
+                or t.dram_free + t.evictable_dram() >= n_blocks)
+
+    def migrate_export(self, req_id: int) -> MigrationExport:
+        """First half of a disaggregated prefill→decode handoff: give every
+        block of the request a host-tier copy (the D2H rides the same path
+        as eager demotion, so already-demoted blocks are free), time the
+        fresh transfers on this replica's link, then release the request
+        here — retaining shared prefixes and content-addressed cache entries
+        for the source's own traffic. In real (paged) mode the host row
+        arrays travel with the export: moved blocks are popped from this
+        store (zero-copy), retained ones are handed off by reference (host
+        rows are immutable once written — later writes rebind the slot)."""
+        descs = self.table.migrate_out(req_id)
+        stats = (self.engine.execute(descs, []) if descs
+                 else TransferStats())
+        if self.data is not None and descs:
+            self.data.run_d2h(descs)
+        self.table.complete_migrate_out(req_id)
+        chain = self._chains.pop(req_id, None)
+        metas = self.table.export_request(req_id)
+        payloads: List[Optional[object]] = []
+        for m in metas:
+            arr = None
+            if self.data is not None:
+                arr = (self.data.host.pop(m.src_dram_slot, None) if m.moved
+                       else self.data.host.get(m.src_dram_slot))
+                if arr is None:
+                    raise RuntimeError(
+                        f"migrate_export({req_id}): DRAM slot "
+                        f"{m.src_dram_slot} holds no data (lost copy)")
+            payloads.append(arr)
+        return MigrationExport(req_id=req_id, metas=metas, payloads=payloads,
+                               chain=chain, stats=stats,
+                               d2h_blocks=len(descs))
+
+    def migrate_import(self, export: MigrationExport) -> Tuple[int, int]:
+        """Second half of the handoff: adopt the exported blocks into this
+        replica's DRAM tier (zero-copy — host arrays are re-registered under
+        this table's slots, no bytes move). Content-addressed blocks the
+        target already holds are shared instead of duplicated, so shared
+        prefixes stay shared across the migration. The H2D that makes the
+        request runnable is NOT issued here: the request re-enters the
+        engine ROTARY and its swap-in rides the target's next
+        ``plan_iteration`` with full-duplex accounting, exactly like a
+        rotary resumption. Returns ``(shared, created)`` block counts."""
+        shared, created = self.table.import_request(export.req_id,
+                                                    export.metas)
+        if self.data is not None:
+            for meta_idx, b in created:
+                arr = export.payloads[meta_idx]
+                if arr is None:
+                    raise RuntimeError(
+                        f"migrate_import({export.req_id}): no payload for "
+                        f"imported block {b.block_id}")
+                self.data.host[b.dram_slot] = arr
+        if export.chain:
+            self._chains[export.req_id] = export.chain
+        return len(shared), len(created)
 
     # -- iteration planning ------------------------------------------------------
     def plan_iteration(self, preempt_reqs: Sequence[int],

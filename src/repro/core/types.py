@@ -133,6 +133,8 @@ class Request:
     finish_time: Optional[float] = None
     # number of rotations (preemptions) this request experienced
     rotations: int = 0
+    # number of cross-replica migrations (disaggregated prefill/decode)
+    migrations: int = 0
 
     @property
     def prefill_done(self) -> bool:
@@ -166,6 +168,14 @@ class Request:
         """ROTARY -> RUNNING: swap-in transfer completed."""
         self.state = RequestState.RUNNING
         self.t_run_start = t
+
+    def begin_migration(self) -> None:
+        """RUNNING/ROTARY -> ROTARY for a cross-replica handoff: KV is
+        exported to the DRAM tier and re-imported on the target replica,
+        where ``resume`` fires once the target's swap-in lands. Not counted
+        as a rotation — migrations are tracked separately."""
+        self.state = RequestState.ROTARY
+        self.migrations += 1
 
     def finish_at(self, t: float, reason: Optional[str] = None) -> None:
         self.state = RequestState.FINISHED

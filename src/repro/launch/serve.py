@@ -21,6 +21,14 @@ Two-tier prefix cache on a shared-prefix trace (``cache_hit_rate`` and
 
     PYTHONPATH=src python -m repro.launch.serve --rps 20 --duration 40 \
         --prefix-cache on --prefix-share 0.5 --json
+
+Disaggregated prefill/decode serving with cross-replica KV migration over
+the DRAM tier (``migrations``/``migration_*`` counters land in the output;
+best exercised under a bursty trace):
+
+    PYTHONPATH=src python -m repro.launch.serve --rps 30 --duration 40 \
+        --arrival burst --disagg --prefill-replicas 1 --decode-replicas 1 \
+        --slo-mix interactive=0.5,standard=0.5 --json
 """
 from __future__ import annotations
 
@@ -38,7 +46,7 @@ def main(argv=None):
                     choices=["rotasched", "fcfs", "wf", "sf", "sjf", "ltr",
                              "lightllm"])
     ap.add_argument("--dataset", default="sharegpt",
-                    choices=["sharegpt", "lmsys"])
+                    choices=["sharegpt", "lmsys", "rag"])
     ap.add_argument("--rps", type=float, default=20.0)
     ap.add_argument("--duration", type=float, default=40.0)
     ap.add_argument("--hw", default="gh200",
@@ -48,6 +56,35 @@ def main(argv=None):
     ap.add_argument("--router", default="least-loaded",
                     choices=list(ROUTER_POLICIES),
                     help="routing policy (used when --replicas > 1)")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "burst", "ramp"],
+                    help="arrival pattern: stationary Poisson (default), "
+                         "on/off bursts, or a linear ramp (mean rate stays "
+                         "--rps for all three)")
+    ap.add_argument("--burst-on", type=float, default=4.0,
+                    help="burst window length in seconds (--arrival burst)")
+    ap.add_argument("--burst-off", type=float, default=8.0,
+                    help="lull length in seconds (--arrival burst)")
+    ap.add_argument("--burst-factor", type=float, default=3.0,
+                    help="rate multiplier inside burst windows")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated prefill/decode serving: requests "
+                         "prefill on a dedicated pool, then their KV "
+                         "migrates to a decode pool through the DRAM tier "
+                         "(overrides --replicas/--router)")
+    ap.add_argument("--prefill-replicas", type=int, default=1,
+                    help="prefill-pool size under --disagg")
+    ap.add_argument("--decode-replicas", type=int, default=1,
+                    help="decode-pool size under --disagg")
+    ap.add_argument("--migration-watermark", type=int, default=2048,
+                    metavar="BLOCKS",
+                    help="per-decode-replica pending-swap-in backlog above "
+                         "which migrations are deferred (keeps decode H2D "
+                         "from starving rotation traffic)")
+    ap.add_argument("--colocate-watermark", type=int, default=8192,
+                    metavar="TOKENS",
+                    help="prefill-pool queue depth above which new arrivals "
+                         "prefill directly on the decode pool")
     ap.add_argument("--slo-mix", default=None, metavar="CLASS=FRAC,...",
                     help="heterogeneous SLO classes, e.g. "
                          "'interactive=0.3,standard=0.5,batch=0.2' "
@@ -94,6 +131,7 @@ def main(argv=None):
         ap.error("--replicas must be >= 1")
 
     from repro.configs import HW_PROFILES, RotaSchedConfig, ServingConfig, get_config
+    from repro.serving.disagg import DisaggCluster
     from repro.serving.engine import ServingEngine
     from repro.serving.router import Router
     from repro.serving.workload import (generate_mixed_requests,
@@ -115,18 +153,25 @@ def main(argv=None):
         prefix_cache=(args.prefix_cache == "on"),
         paged_runner=args.paged_runner)
     hw = HW_PROFILES[args.hw]
+    arrival_kw = (dict(burst_on=args.burst_on, burst_off=args.burst_off,
+                       burst_factor=args.burst_factor)
+                  if args.arrival == "burst" else None)
     if args.prefix_share is not None:
         reqs = generate_shared_prefix_requests(
             args.dataset, args.rps, args.duration, seed=args.seed,
             share_ratio=args.prefix_share, prefix_len=args.prefix_len,
-            n_prefixes=args.prefix_count, class_mix=args.slo_mix)
+            n_prefixes=args.prefix_count, class_mix=args.slo_mix,
+            arrival=args.arrival, arrival_kw=arrival_kw)
     elif args.slo_mix:
         reqs = generate_mixed_requests(args.dataset, args.rps, args.duration,
                                        seed=args.seed,
-                                       class_mix=args.slo_mix)
+                                       class_mix=args.slo_mix,
+                                       arrival=args.arrival,
+                                       arrival_kw=arrival_kw)
     else:
         reqs = generate_requests(args.dataset, args.rps, args.duration,
-                                 seed=args.seed)
+                                 seed=args.seed, arrival=args.arrival,
+                                 arrival_kw=arrival_kw)
 
     runner_cfg = None
     if args.paged_runner:
@@ -150,7 +195,17 @@ def main(argv=None):
                 r.prompt_ids = [1 + (int(x) % (runner_cfg.vocab_size - 1))
                                 for x in r.prompt_ids[:r.prompt_len]]
 
-    if args.replicas > 1:
+    if args.disagg:
+        cluster = DisaggCluster(
+            cfg, sv, hw, prefill_replicas=args.prefill_replicas,
+            decode_replicas=args.decode_replicas,
+            migration_watermark=args.migration_watermark,
+            colocate_watermark=args.colocate_watermark,
+            runner_cfg=runner_cfg, runner_seed=args.seed)
+        rep = cluster.run(reqs)
+        stats = cluster.aggregate_stats()
+        cache_counters = cluster.aggregate_cache_counters()
+    elif args.replicas > 1:
         router = Router(cfg, sv, hw, replicas=args.replicas,
                         policy=args.router, runner_cfg=runner_cfg,
                         runner_seed=args.seed)
@@ -168,6 +223,7 @@ def main(argv=None):
     # prefix_hit_rate "cache_hit_rate" (what CI/README bind to)
     row["cache_hit_rate"] = row.pop("prefix_hit_rate", rep.prefix_hit_rate)
     row.update(scheduler=args.scheduler, model=args.model, rps=args.rps,
+               arrival=args.arrival,
                active_rotations=stats.active_rotations,
                passive_preemptions=stats.passive_preemptions,
                eager_blocks=stats.eager_blocks,
@@ -178,8 +234,12 @@ def main(argv=None):
     if args.paged_runner:
         # per-replica executors: sum counters cluster-wide (replicas == 1
         # degenerates to the single engine's executor)
-        execs = ([rep_core.executor for rep_core in router.replicas]
-                 if args.replicas > 1 else [eng.core.executor])
+        if args.disagg:
+            execs = [rep_core.executor for rep_core in cluster.replicas]
+        elif args.replicas > 1:
+            execs = [rep_core.executor for rep_core in router.replicas]
+        else:
+            execs = [eng.core.executor]
         row.update(
             paged_runner=True,
             decode_batches=sum(e.decode_batches for e in execs),
@@ -192,7 +252,14 @@ def main(argv=None):
         row.update(cache_counters=cache_counters)
     if args.slo_mix:
         row.update(slo_mix=args.slo_mix)
-    if args.replicas > 1:
+    if args.disagg:
+        pool_tokens = cluster.pool_token_counts()
+        row.update(disagg=True, prefill_replicas=args.prefill_replicas,
+                   decode_replicas=args.decode_replicas,
+                   migration=cluster.migration_counters(),
+                   prefill_pool_tokens=pool_tokens["prefill"],
+                   decode_pool_tokens=pool_tokens["decode"])
+    if not args.disagg and args.replicas > 1:
         row.update(replicas=args.replicas, router=args.router,
                    per_replica=[
                        dict(replica=p.idx, n=p.n_routed,

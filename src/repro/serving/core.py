@@ -332,12 +332,7 @@ class EngineCore:
         r = self._index.get(req_id)
         if r is None or r.state == RequestState.FINISHED:
             return False
-        if any(a.req_id == req_id for a in self.active):
-            self.active = [a for a in self.active if a.req_id != req_id]
-        else:                          # still on the arrival heap
-            self._pending = [(t, s, q) for (t, s, q) in self._pending
-                             if q.req_id != req_id]
-            heapq.heapify(self._pending)
+        self._remove_live(req_id)
         # frees HBM and DRAM residency in one go; a ROTARY request with a
         # swap-in scheduled for the next iteration simply never reaches the
         # scheduler again (the swap-in is cancelled by removal from `active`)
@@ -348,6 +343,58 @@ class EngineCore:
         self.stats.aborted += 1
         self.collector.dispatch([r.make_output(self.clock)])
         return True
+
+    def _remove_live(self, req_id: int) -> None:
+        """Drop a request from the active set or, failing that, the arrival
+        heap (shared by abort and the migration detach)."""
+        if any(a.req_id == req_id for a in self.active):
+            self.active = [a for a in self.active if a.req_id != req_id]
+        else:                          # still on the arrival heap
+            self._pending = [(t, s, q) for (t, s, q) in self._pending
+                             if q.req_id != req_id]
+            heapq.heapify(self._pending)
+
+    # -------------------------------------------------- migration (disagg)
+    def detach_request(self, req_id: int) -> Optional[Request]:
+        """Remove a live request WITHOUT finishing it — the first step of a
+        cross-replica handoff (serving.disagg). KV block export/import is
+        the caller's job (``DuplexKV.migrate_export``); this only severs the
+        engine-side bookkeeping. Pool-backed executors hold no per-request
+        state, so ``drop`` is safe; the dense legacy RealExecutor cannot
+        migrate (its caches are not exportable) and is rejected by
+        ``DisaggCluster``. Returns the request, or None if unknown/finished.
+        """
+        r = self._index.get(req_id)
+        if r is None or r.state == RequestState.FINISHED:
+            return None
+        del self._index[req_id]
+        self._remove_live(req_id)
+        self.executor.drop(req_id)
+        return r
+
+    def adopt_request(self, req: Request, *, arrival_time: float) -> None:
+        """Insert a migrated-in request. Its KV must already be imported
+        into this replica's DRAM tier (``DuplexKV.migrate_import``) and its
+        state set ROTARY; it enters the engine once the clock reaches
+        ``arrival_time`` (the migration's D2H completion) and resumes
+        through the ordinary rotary swap-in path. NOT added to
+        ``submitted`` — the request stays attributed to the replica it
+        arrived on; cluster-level reporting owns the union."""
+        if req.req_id in self._index:
+            raise ValueError(f"adopt_request: duplicate req_id {req.req_id}")
+        heapq.heappush(self._pending, (arrival_time, next(self._seq), req))
+        self._index[req.req_id] = req
+        self._next_req_id = max(self._next_req_id, req.req_id + 1)
+
+    def rotary_backlog_blocks(self) -> int:
+        """HBM blocks the pending swap-ins of this replica's ROTARY
+        requests will demand — the H2D pressure signal the disaggregation
+        dispatcher gates migrations on (migrated-in requests land ROTARY,
+        so their H2D competes with rotation resumptions)."""
+        bs = self.serving.block_size
+        live = self.active + [p[2] for p in self._pending]
+        return sum(r.blocks_needed(bs) for r in live
+                   if r.state == RequestState.ROTARY)
 
     def _pump(self) -> bool:
         """Advance one iteration on behalf of a streaming handle."""

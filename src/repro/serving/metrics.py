@@ -54,6 +54,7 @@ class SLOReport:
     throughput_tok_s: float
     total_time_s: float
     rotations: int
+    migrations: int = 0                # cross-replica KV handoffs (disagg)
     n_aborted: int = 0
     n_no_token: int = 0
     # Two-tier prefix cache (0.0/0 with the cache off — replay-inert):
@@ -125,6 +126,7 @@ def evaluate(requests: Sequence[Request], *, total_time: float) -> SLOReport:
         throughput_tok_s=toks / total_time if total_time else 0.0,
         total_time_s=total_time,
         rotations=sum(r.rotations for r in requests),
+        migrations=sum(r.migrations for r in requests),
         n_aborted=len(requests) - n_live,
         n_no_token=n_live - len(done),
         prefix_hit_rate=cached_toks / prompt_toks if prompt_toks else 0.0,

@@ -154,6 +154,11 @@ class OutputCollector:
     def get(self, req_id: int) -> Optional[RequestHandle]:
         return self._handles.get(req_id)
 
+    def detach(self, req_id: int) -> Optional[RequestHandle]:
+        """Remove and return a handle so it can follow its request to
+        another replica's collector (the disaggregation handoff)."""
+        return self._handles.pop(req_id, None)
+
     def dispatch(self, outputs: List[RequestOutput]) -> None:
         for out in outputs:
             h = self._handles.get(out.req_id)

@@ -5,11 +5,16 @@ clock). The router advances every replica's simulation to a request's arrival
 time before routing it, so load-aware policies see the state an online
 dispatcher would. Policies:
 
-  * ``round-robin``   — arrival order, ignores load (baseline),
-  * ``least-loaded``  — fewest requests in flight,
-  * ``slo-aware``     — least TTFT pressure: pending prefill tokens (the work
-    standing between a new arrival and its first token) plus the decode
-    population as a tiebreaker, scaled by remaining HBM headroom.
+  * ``round-robin``     — arrival order, ignores load (baseline),
+  * ``least-loaded``    — fewest requests in flight,
+  * ``slo-aware``       — least TTFT pressure: pending prefill tokens (the
+    work standing between a new arrival and its first token) plus the decode
+    population as a tiebreaker, scaled by remaining HBM headroom,
+  * ``prefix-affinity`` — consistent-hash on the request's first-block
+    prefix hash, so same-prefix requests land on the same replica and hit
+    its prefix cache instead of re-prefilling cold on another one;
+    cache-cold requests (no token ids / shorter than one block) fall back
+    to least-loaded.
 
 ``Router.run(trace)`` replays a whole arrival trace; ``add_request``/
 ``step``/``drain`` mirror the single-engine online API. Reports come
@@ -73,7 +78,55 @@ class SLOAware(RoutingPolicy):
         return min(range(len(replicas)), key=risk)
 
 
-_POLICIES = {p.name: p for p in (RoundRobin, LeastLoaded, SLOAware)}
+class PrefixAffinity(RoutingPolicy):
+    """Consistent-hash on the first-block prefix hash: requests sharing a
+    prompt prefix (multi-turn chat, common system prompts) concentrate on
+    one replica, whose prefix cache then serves them — per-replica caches
+    are independent, so scattering same-prefix requests (round-robin) pays
+    one cold prefill per replica instead of one per cluster. The hash ring
+    (``VNODES`` virtual nodes per replica) keeps the mapping stable as
+    replica count changes; cache-cold requests — no token ids, or a prompt
+    shorter than one block — carry nothing cacheable and fall back to
+    least-loaded."""
+    name = "prefix-affinity"
+    VNODES = 32
+    _MASK = (1 << 32) - 1
+
+    def __init__(self):
+        self._fallback = LeastLoaded()
+        self._ring: List[tuple] = []        # [(point, replica_idx)] sorted
+        self._ring_n = 0
+
+    def _ring_for(self, n: int) -> List[tuple]:
+        if self._ring_n != n:
+            # int-only tuples: Python hashes them deterministically
+            # regardless of PYTHONHASHSEED (unlike str)
+            self._ring = sorted(
+                (hash((0x51AF_F1A1, i, v)) & self._MASK, i)
+                for i in range(n) for v in range(self.VNODES))
+            self._ring_n = n
+        return self._ring
+
+    def choose(self, replicas, req):
+        ids = req.prompt_ids
+        bs = replicas[0].serving.block_size
+        if not ids or len(ids) < bs:
+            return self._fallback.choose(replicas, req)
+        from repro.core.duplexkv import prefix_hash_chain
+        key = prefix_hash_chain(ids[:bs], bs)[0] & self._MASK
+        ring = self._ring_for(len(replicas))
+        lo, hi = 0, len(ring)
+        while lo < hi:                       # first ring point >= key
+            mid = (lo + hi) // 2
+            if ring[mid][0] < key:
+                lo = mid + 1
+            else:
+                hi = mid
+        return ring[lo % len(ring)][1]
+
+
+_POLICIES = {p.name: p for p in (RoundRobin, LeastLoaded, SLOAware,
+                                 PrefixAffinity)}
 ROUTER_POLICIES = tuple(sorted(_POLICIES))
 
 
@@ -230,8 +283,9 @@ class Router:
         Each replica owns an independent cache — there is no cross-replica
         block sharing — so the cluster hit rate depends on how often the
         routing policy lands same-prefix requests on the same replica
-        (round-robin scatters them; a future prefix-affinity policy would
-        concentrate them). The report-level ``prefix_hit_rate`` from
+        (round-robin scatters them; ``prefix-affinity`` concentrates them —
+        asserted in tests/test_prefix_cache.py). The report-level
+        ``prefix_hit_rate`` from
         ``aggregate_report`` is already cluster-wide: ``merge_reports``
         recomputes it from the union of raw requests.
         """

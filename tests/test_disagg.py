@@ -1,0 +1,425 @@
+"""Disaggregated prefill/decode serving: migration block accounting (unit +
+hypothesis fuzz over migrate/abort/finish/re-migrate), cluster integration
+(backpressure, colocation fallback, streaming handles, abort-after-migrate),
+real-path (paged-runner) token parity against colocated execution, and
+--disagg-off golden replay parity."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import GH200, RotaSchedConfig, ServingConfig, get_config
+from repro.core.blocktable import BlockLoc, OutOfBlocks
+from repro.core.duplexkv import DuplexKV, prefix_hash_chain
+from repro.core.migration import MigrationEngine
+from repro.core.types import Request, RequestState, SamplingParams
+from repro.serving.disagg import DisaggCluster
+from repro.serving.engine import ServingEngine
+from repro.serving.workload import (generate_bursty_requests,
+                                    generate_ramp_requests,
+                                    generate_requests)
+
+CFG = get_config("qwen2.5-32b")
+BS = 4
+
+
+def _sv(hbm=64, dram=128, cache=True, **kw):
+    return ServingConfig(num_hbm_blocks=hbm, num_dram_blocks=dram,
+                         block_size=BS, prefix_cache=cache, **kw)
+
+
+def make_kv(hbm=64, dram=128, cache=True):
+    return DuplexKV(CFG, _sv(hbm, dram, cache), GH200)
+
+
+def assert_conserved(table):
+    """No slot leaked or double-freed: every HBM/DRAM slot is either held
+    by exactly one block or on the free list (check_invariants only bounds
+    the sum from above)."""
+    table.check_invariants()
+    hbm_used = sum(1 for b in table._blocks.values()
+                   if b.hbm_slot is not None
+                   and (b.loc in (BlockLoc.HBM, BlockLoc.BOTH)
+                        or b.h2d_inflight))
+    dram_used = sum(1 for b in table._blocks.values()
+                    if b.dram_slot is not None
+                    and (b.loc in (BlockLoc.DRAM, BlockLoc.BOTH)
+                         or b.d2h_inflight))
+    assert hbm_used + len(table._hbm_free) == table.num_hbm_blocks, \
+        "HBM slot leak/double-free"
+    assert dram_used + len(table._dram_free) == table.num_dram_blocks, \
+        "DRAM slot leak/double-free"
+
+
+def prefill_on(kv, rid, ids):
+    """Mimic the engine's arrival + prefill on one replica's DuplexKV."""
+    cached = kv.lookup_prefix(rid, ids)
+    kv.plan_iteration([], [], 0.0)     # promotions (if any) land
+    need = -(-len(ids) // BS) - len(kv.table.blocks_of(rid))
+    if need > 0:
+        kv.table.alloc(rid, need)
+    kv._chains.setdefault(rid, prefix_hash_chain(ids, BS))
+    kv.sync_progress(rid, len(ids))
+    return cached
+
+
+def ids_for(family, n=14, salt=0):
+    pre = [family] * (2 * BS)            # two shared-family blocks
+    start = 100 + 997 * salt
+    return (pre + list(range(start, start + max(n - len(pre), 0))))[:n]
+
+
+# ------------------------------------------------------ unit: export/import
+
+def test_migrate_roundtrip_and_target_swap_in():
+    a, b = make_kv(), make_kv()
+    me = MigrationEngine()
+    prefill_on(a, 1, ids_for(7, n=18))
+    n_blocks = len(a.table.blocks_of(1))
+    assert me.can_migrate(1, a, b)
+    rec = me.migrate(1, a, b, t=1.0)
+    assert rec.blocks == n_blocks and rec.t_ready >= 1.0
+    assert not a.table.blocks_of(1)            # source released the request
+    got = b.table.blocks_of(1)
+    assert len(got) == n_blocks
+    assert all(blk.loc == BlockLoc.DRAM for blk in got)
+    assert_conserved(a.table)
+    assert_conserved(b.table)
+    b.plan_iteration([], [1], 0.0)             # rotary swap-in on the target
+    assert all(blk.loc == BlockLoc.BOTH for blk in b.table.blocks_of(1))
+    assert_conserved(b.table)
+    b.finish(1)
+    assert_conserved(b.table)
+
+
+def test_migrated_prefix_hashes_shared_on_target_and_retained_on_source():
+    a, b = make_kv(), make_kv()
+    me = MigrationEngine()
+    prefill_on(a, 1, ids_for(7, n=18, salt=1))
+    me.migrate(1, a, b, t=0.0)
+    # source retains the hashed prefix blocks as refcount-0 cache entries
+    assert a.table.cached_blocks >= 2
+    # a second same-family request migrates: its two prefix blocks hash-hit
+    # the first import instead of duplicating
+    prefill_on(a, 2, ids_for(7, n=18, salt=2))
+    assert a.table.cache_hit_blocks >= 2       # source cache hit too
+    rec2 = me.migrate(2, a, b, t=0.0)
+    assert rec2.shared_on_target >= 2
+    # req 1 is still live on b, so the prefix blocks are genuinely shared
+    live_shared = [blk for blk in b.table.blocks_of(1)
+                   if 2 in blk.ref_ids]
+    assert len(live_shared) >= 2
+    assert_conserved(a.table)
+    assert_conserved(b.table)
+
+
+def test_migrate_out_is_free_for_already_demoted_blocks():
+    a, b = make_kv(), make_kv()
+    me = MigrationEngine()
+    prefill_on(a, 1, ids_for(3, n=16))
+    # eager-demote everything first (the background D2H path)
+    descs = a.table.eager_candidates(limit=64)
+    for d in descs:
+        a.table.complete_d2h(d.block_id)
+    rec = me.migrate(1, a, b, t=0.0)
+    assert rec.d2h_blocks == 0 and rec.free_blocks == rec.blocks
+    assert rec.d2h_time_s == 0.0               # zero-copy handoff
+    assert_conserved(a.table)
+    assert_conserved(b.table)
+
+
+def test_remigrate_back_and_abort_accounting():
+    a, b = make_kv(), make_kv()
+    me = MigrationEngine()
+    prefill_on(a, 1, ids_for(5, n=18))
+    me.migrate(1, a, b, t=0.0)
+    b.plan_iteration([], [1], 0.0)             # resume on b
+    me.migrate(1, b, a, t=1.0)                 # re-migrate back
+    assert len(a.table.blocks_of(1)) == 5
+    a.finish(1)                                # abort/finish on final owner
+    assert_conserved(a.table)
+    assert_conserved(b.table)
+
+
+def test_export_without_dram_copy_is_rejected():
+    a = make_kv()
+    a.table.alloc(1, 2)
+    with pytest.raises(RuntimeError):
+        a.table.export_request(1)              # migrate_out never ran
+
+
+def test_migrate_out_rolls_back_on_dram_exhaustion():
+    a = make_kv(hbm=8, dram=2, cache=False)
+    a.table.alloc(1, 4)
+    free_before = a.table.dram_free
+    with pytest.raises(OutOfBlocks):
+        a.table.migrate_out(1)
+    assert a.table.dram_free == free_before
+    assert all(not blk.d2h_inflight and blk.dram_slot is None
+               for blk in a.table.blocks_of(1))
+    assert_conserved(a.table)
+
+
+# --------------------------------------------------------- hypothesis fuzz
+
+def test_migration_accounting_fuzz():
+    pytest.importorskip("hypothesis")
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    ops = st.lists(
+        st.tuples(st.sampled_from(["arrive", "migrate", "swapin", "preempt",
+                                   "finish", "eager"]),
+                  st.integers(0, 5),           # request id
+                  st.integers(0, 2),           # prompt family
+                  st.integers(0, 1)),          # side bit (A or B)
+        min_size=1, max_size=60)
+
+    @given(ops)
+    @settings(max_examples=80, deadline=None)
+    def run(seq):
+        kvs = (make_kv(hbm=12, dram=96), make_kv(hbm=12, dram=96))
+        me = MigrationEngine()
+        owner = {}
+        for op, rid, fam, side in seq:
+            if op == "arrive" and rid not in owner:
+                kv = kvs[side]
+                try:
+                    prefill_on(kv, rid, ids_for(fam, n=14, salt=rid))
+                except OutOfBlocks:
+                    kv.finish(rid)             # roll back partial refs
+                else:
+                    owner[rid] = side
+            elif op == "migrate" and rid in owner:
+                src, dst = kvs[owner[rid]], kvs[1 - owner[rid]]
+                if me.can_migrate(rid, src, dst):
+                    me.migrate(rid, src, dst, t=0.0)
+                    owner[rid] = 1 - owner[rid]
+            elif op == "swapin" and rid in owner:
+                kvs[owner[rid]].plan_iteration([], [rid], 0.0)
+            elif op == "preempt" and rid in owner:
+                kv = kvs[owner[rid]]
+                if kv.table.dram_free >= len(kv.table.blocks_of(rid)):
+                    kv.plan_iteration([rid], [], 0.0)
+            elif op == "finish" and rid in owner:
+                kvs[owner.pop(rid)].finish(rid)
+            elif op == "eager":
+                kv = kvs[side]
+                for d in kv.table.eager_candidates(limit=4):
+                    kv.table.complete_d2h(d.block_id)
+            assert_conserved(kvs[0].table)
+            assert_conserved(kvs[1].table)
+        for rid, side in list(owner.items()):
+            kvs[side].finish(rid)
+        assert_conserved(kvs[0].table)
+        assert_conserved(kvs[1].table)
+
+    run()
+
+
+# ------------------------------------------------------- arrival patterns
+
+def test_arrival_patterns_share_lengths_and_mean_rate():
+    """Burst/ramp traces draw the same request count and length stream as
+    the stationary trace at one seed — only arrival TIMES differ — so
+    cross-pattern comparisons isolate the arrival process."""
+    pois = generate_requests("sharegpt", 20, 30, seed=5)
+    burst = generate_bursty_requests("sharegpt", 20, 30, seed=5,
+                                     burst_on=4, burst_off=8,
+                                     burst_factor=3.0)
+    ramp = generate_ramp_requests("sharegpt", 20, 30, seed=5)
+    assert len(pois) == len(burst) == len(ramp) == 600
+    assert [r.prompt_len for r in pois] == [r.prompt_len for r in burst] \
+        == [r.prompt_len for r in ramp]
+    # burst factor 3 with on=4/off=8 puts the whole mass in on-windows
+    frac_on = np.mean([(r.arrival_time % 12.0) < 4.0 for r in burst])
+    assert frac_on > 0.95
+    # ramp: the first half of the duration carries well under half the mass
+    t_ramp = np.array([r.arrival_time for r in ramp])
+    assert (t_ramp < 15.0).mean() < 0.4
+    # class mix composes without touching arrivals
+    mixed = generate_bursty_requests("sharegpt", 20, 30, seed=5,
+                                     burst_on=4, burst_off=8,
+                                     burst_factor=3.0,
+                                     class_mix="interactive=0.5,batch=0.5")
+    assert [r.arrival_time for r in mixed] == [r.arrival_time for r in burst]
+    assert {r.slo_class for r in mixed} == {"interactive", "batch"}
+
+
+def test_burst_factor_validation():
+    with pytest.raises(ValueError):
+        generate_bursty_requests("sharegpt", 10, 10, burst_on=4,
+                                 burst_off=8, burst_factor=99.0)
+
+
+# ------------------------------------------------------ cluster integration
+
+def cluster_sv(hbm=4000):
+    rot = RotaSchedConfig(alpha=3.0, beta_b=0.0, beta_f=0.5, b_xfer=2400)
+    return ServingConfig(num_hbm_blocks=hbm, num_dram_blocks=100000,
+                         scheduler="rotasched", rotary=rot, auto_b_xfer=True)
+
+
+def test_cluster_migrates_and_finishes_everything():
+    reqs = generate_bursty_requests("sharegpt", 12, 10, seed=0,
+                                    burst_factor=3.0)
+    dc = DisaggCluster(CFG, cluster_sv(), GH200, prefill_replicas=1,
+                       decode_replicas=1)
+    rep = dc.run(reqs, max_time_s=500)
+    assert rep.n == len(reqs)
+    assert rep.n_no_token == 0
+    assert rep.migrations > 0
+    assert dc.migrator.stats.migrations == rep.migrations
+    tokens = dc.pool_token_counts()
+    assert tokens["decode"] > 0
+    # every request finished; block tables fully reconciled
+    for core in dc.replicas:
+        assert not core.has_work
+        assert_conserved(core.kv.table)
+    # migration never double-counts a request across replicas
+    assert sum(r.tokens_generated for r in reqs) > 0
+    assert rep.throughput_tok_s > 0
+
+
+def test_backpressure_watermark_defers_to_colocation():
+    """An unreachable watermark gates every handoff; requests decode where
+    they prefilled (colocation fallback) and still all finish."""
+    reqs = generate_requests("sharegpt", 10, 6, seed=1)
+    dc = DisaggCluster(CFG, cluster_sv(), GH200, prefill_replicas=1,
+                       decode_replicas=1, migration_watermark=1,
+                       defer_tokens=2)
+    rep = dc.run(reqs, max_time_s=500)
+    assert rep.n == len(reqs) and rep.n_no_token == 0
+    assert rep.migrations == 0
+    assert dc.migrator.stats.deferred > 0
+    assert dc.migrator.stats.colocated_sticky > 0
+    assert dc.pool_token_counts()["prefill"] > 0
+    for core in dc.replicas:
+        assert_conserved(core.kv.table)
+
+
+def test_dispatch_colocation_fallback_on_prefill_overload():
+    """A tiny colocate watermark routes overflow arrivals straight to the
+    decode pool, which prefills them locally (never migrated)."""
+    reqs = generate_requests("sharegpt", 20, 6, seed=2)
+    dc = DisaggCluster(CFG, cluster_sv(), GH200, prefill_replicas=1,
+                       decode_replicas=1, colocate_watermark=64)
+    rep = dc.run(reqs, max_time_s=500)
+    assert rep.n == len(reqs) and rep.n_no_token == 0
+    assert dc.colocated_prefills > 0
+    colocated = dc.migration_counters()["colocated_prefills"]
+    assert colocated == dc.colocated_prefills
+    for core in dc.replicas:
+        assert_conserved(core.kv.table)
+
+
+def test_streaming_handle_follows_migration():
+    dc = DisaggCluster(CFG, cluster_sv(), GH200, prefill_replicas=1,
+                       decode_replicas=1)
+    h = dc.add_request(prompt_len=96,
+                       sampling_params=SamplingParams(max_tokens=12),
+                       slo_class="interactive")
+    events = list(h.stream())
+    assert events and events[-1].finished
+    assert sum(e.new_tokens for e in events) == 12
+    assert h.request.migrations == 1
+    assert h.request.state == RequestState.FINISHED
+    assert h.metrics()["tokens_generated"] == 12
+
+
+def test_abort_after_migration_frees_both_replicas():
+    dc = DisaggCluster(CFG, cluster_sv(hbm=256), GH200, prefill_replicas=1,
+                       decode_replicas=1)
+    h = dc.add_request(prompt_len=200,
+                       sampling_params=SamplingParams(max_tokens=400))
+    spin = 0
+    while h.request.migrations == 0 and spin < 500:
+        dc.step()
+        spin += 1
+    assert h.request.migrations == 1
+    assert h.abort() is True
+    assert h.request.aborted
+    dc.drain(max_time_s=500)
+    for core in dc.replicas:
+        assert_conserved(core.kv.table)
+    rep = dc.aggregate_report()
+    assert rep.n_aborted == 1
+
+
+def test_ttft_paid_on_prefill_pool_and_tbt_amortizes_migration():
+    """The first token is emitted at the prefill tail on the source replica
+    — migration latency lands between token 1 and 2, never in TTFT."""
+    reqs = generate_requests("sharegpt", 8, 8, seed=3)
+    dc = DisaggCluster(CFG, cluster_sv(), GH200, prefill_replicas=1,
+                       decode_replicas=1)
+    rep = dc.run(reqs, max_time_s=500)
+    assert rep.migrations > 0
+    assert rep.ttft_attainment == 1.0
+    migrated = [r for r in reqs if r.migrations]
+    assert migrated
+    for r in migrated:
+        assert r.t_first_token is not None
+        assert r.token_times[0] == r.t_first_token
+
+
+# ------------------------------------------------- real-path token parity
+
+def test_disagg_token_parity_with_colocated_paged_runner():
+    """Migrated requests must decode to exactly the tokens colocated
+    execution produces: KV physically rides D2H -> host handoff -> H2D and
+    any corruption flips the argmax stream."""
+    tiny = dataclasses.replace(get_config("llama3-8b").reduced(),
+                               dtype="float32")
+    sv = ServingConfig(num_hbm_blocks=256, num_dram_blocks=512, block_size=4,
+                       max_model_len=64, prefill_chunk=16, paged_runner=True)
+    rng = np.random.default_rng(11)
+    reqs = []
+    for i in range(4):
+        plen = int(rng.integers(8, 14))
+        reqs.append(Request(
+            req_id=i, arrival_time=0.05 * i, prompt_len=plen,
+            output_len=int(rng.integers(5, 8)),
+            prompt_ids=[int(x) for x in
+                        rng.integers(1, tiny.vocab_size, plen)]))
+
+    def clone(rs):
+        return [dataclasses.replace(r, generated_ids=[], token_times=[])
+                for r in rs]
+
+    eng = ServingEngine(tiny, sv, GH200, runner_cfg=tiny, runner_seed=7)
+    for r in clone(reqs):
+        eng.submit(r)
+    eng.drain(max_time_s=500)
+    ref = {r.req_id: list(r.generated_ids) for r in eng.core.submitted}
+    assert all(ref.values())
+
+    dc = DisaggCluster(tiny, sv, GH200, prefill_replicas=1,
+                       decode_replicas=1, runner_cfg=tiny, runner_seed=7)
+    dreqs = clone(reqs)
+    rep = dc.run(dreqs, max_time_s=500)
+    assert rep.migrations > 0, "no handoff exercised — test is vacuous"
+    got = {r.req_id: list(r.generated_ids) for r in dreqs}
+    assert got == ref
+    for core in dc.replicas:
+        assert_conserved(core.kv.table)
+    # the physical host tier actually carried the migrated rows
+    src = dc.prefill_pool[0].executor.store
+    dst = dc.decode_pool[0].executor.store
+    assert src.d2h_rows > 0 and dst.h2d_rows > 0
+
+
+# ------------------------------------------------------- golden parity (off)
+
+def test_serve_without_disagg_replays_pr4_golden():
+    """--disagg off must stay bit-identical to the PR 4 replay (same values
+    the CI golden smoke pins)."""
+    from repro.launch.serve import main
+    row = main(["--rps", "20", "--duration", "10", "--json"])
+    golden = {"n": 200,
+              "p50_ttft": 0.07106629294746247,
+              "p99_ttft": 0.3495841457778218,
+              "throughput_tok_s": 1306.7410706432238,
+              "total_time_s": 30.602083992290844}
+    for k, want in golden.items():
+        assert row[k] == want, (k, row[k], want)
+    assert row["migrations"] == 0

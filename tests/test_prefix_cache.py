@@ -338,6 +338,39 @@ def test_router_reports_cluster_wide_hit_rate():
     assert counters["cache_hit_tokens"] > 0
 
 
+def test_prefix_affinity_routing_beats_round_robin_hit_rate():
+    """Consistent-hash routing lands same-prefix requests on one replica,
+    so the cluster pays one cold prefill per prefix instead of one per
+    (prefix, replica) pair — the hit rate must be strictly higher on the
+    same trace."""
+    def run(policy):
+        reqs = generate_shared_prefix_requests("sharegpt", 16, 8, seed=2,
+                                               share_ratio=0.8, n_prefixes=6)
+        router = Router(CFG, _sv(), GH200, replicas=3, policy=policy)
+        rep = router.run(reqs, max_time_s=400)
+        return rep, router
+
+    rr_rep, _ = run("round-robin")
+    af_rep, af_router = run("prefix-affinity")
+    assert af_rep.prefix_hit_rate > rr_rep.prefix_hit_rate
+    # determinism: same prefix -> same replica, every time
+    again, _ = run("prefix-affinity")
+    assert again.prefix_hit_rate == af_rep.prefix_hit_rate
+    for c in af_router.replicas:
+        c.kv.table.check_invariants()
+
+
+def test_prefix_affinity_cold_requests_fall_back_to_least_loaded():
+    """Requests without token ids (oracle traces) carry nothing cacheable:
+    the policy must degrade to least-loaded, not crash or pile onto one
+    replica."""
+    reqs = generate_requests("sharegpt", 16, 6, seed=3)   # no prompt_ids
+    router = Router(CFG, _sv(), GH200, replicas=2, policy="prefix-affinity")
+    rep = router.run(reqs, max_time_s=400)
+    assert rep.n == len(reqs)
+    assert all(len(c.submitted) > 0 for c in router.replicas)
+
+
 # ------------------------------------------------- property-based (fuzz)
 
 def test_refcount_soundness_under_random_ops():
