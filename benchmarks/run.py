@@ -25,6 +25,7 @@ MODULES = [
     ("prefix_cache", "benchmarks.bench_prefix_cache"),
     ("paged_decode", "benchmarks.bench_paged_decode"),
     ("disagg", "benchmarks.bench_disagg"),
+    ("pipeline", "benchmarks.bench_pipeline"),
 ]
 
 

@@ -373,7 +373,14 @@ class ServingConfig:
     block_first_layout: bool = True
     batched_transfer_kernel: bool = True
     duplex: bool = True
-    pipeline_overlap: bool = True         # cross-iteration pipeline
+    pipeline_overlap: bool = True         # within-iteration exec/transfer max
+    # Cross-iteration two-stage pipeline: while iteration N's kernels
+    # execute, iteration N+1 is planned and its transfers staged — the
+    # per-direction duplex channels persist ACROSS iterations and compute
+    # serializes only on true row dependencies (promotion reads, swap-in
+    # rows feeding the next batch). Default off: the synchronous path is
+    # bit-identical to the golden replay. See DESIGN.md §Pipelined execution.
+    pipeline: bool = False
     max_model_len: int = 8192
     # Two-tier prefix cache (ref-counted, content-addressed KV blocks with
     # DRAM-tier demotion through DuplexKV). Default off: replay bit-identical

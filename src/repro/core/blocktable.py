@@ -138,6 +138,14 @@ class TwoTierBlockTable:
         # intra-HBM row copies (CoW forks) pending physical execution; only
         # consumed when a data backend is attached (see DuplexKV)
         self.pending_d2d: List[Tuple[int, int]] = []   # (src_slot, dst_slot)
+        # Pipelined-execution hazard tracking: HBM slots the CURRENT batch
+        # reads/writes (set by the engine before kernels dispatch, cleared
+        # after). A slot under an in-flight transfer may not be written by
+        # compute, and a slot an in-flight H2D is writing may not be touched
+        # by compute at all; read-read (eager D2H under decode reads of the
+        # same synced block) is legal — that concurrency is the whole point.
+        self.compute_reads: Set[int] = set()
+        self.compute_writes: Set[int] = set()
         self._tick = 0
         self._mut = 0                  # bumped on cache-membership mutations
         self._evict_memo: Tuple[int, int] = (-1, 0)    # (mut, evictable)
@@ -372,6 +380,20 @@ class TwoTierBlockTable:
             self._evict_memo = (self._mut, n)
         return self._evict_memo[1]
 
+    def deprioritize_slots(self, slots: Set[int]) -> None:
+        """Move the given HBM slots to the COLD end of the free list
+        (pipelined mode): a slot freed by ``complete_swap_out`` whose
+        outbound D2H is still draining on the link is handed out again only
+        when nothing else is free, so swap-in destinations avoid same-slot
+        serialization with the in-flight read (``h2d_after_d2h``)."""
+        if not slots or not self._hbm_free:
+            return
+        cold = [s for s in self._hbm_free if s in slots]
+        if not cold:
+            return
+        hot = [s for s in self._hbm_free if s not in slots]
+        self._hbm_free[:] = cold + hot
+
     def _take_hbm_slot(self, exclude: Set[int] = frozenset()
                        ) -> Optional[int]:
         if self._hbm_free:
@@ -464,16 +486,25 @@ class TwoTierBlockTable:
 
     # -- eager rotation ---------------------------------------------------------
     def eager_candidates(self, limit: int,
-                         exclude_reqs: Set[int] = frozenset()) -> List[TransferDesc]:
+                         exclude_reqs: Set[int] = frozenset(),
+                         exclude_slots: Set[int] = frozenset()
+                         ) -> List[TransferDesc]:
         """Synced HBM-only blocks to copy to DRAM in the background. With the
         prefix cache on, refcount-0 cached HBM entries qualify too — this is
-        the demotion path that makes their later eviction free."""
+        the demotion path that makes their later eviction free.
+        ``exclude_slots``: HBM rows the current iteration's kernels WRITE
+        (pipelined mode) — a block is marked synced on its LOGICAL token
+        count, one token ahead of the physical KV write, so the tail block
+        of a still-decoding request can be synced while its last row slot is
+        written this very iteration; demoting it concurrently would copy the
+        row mid-write (guard_compute would fire)."""
         descs = []
         for b in self._blocks.values():
             if len(descs) >= limit or not self._dram_free:
                 break
             if (b.loc == BlockLoc.HBM and b.synced and not b.d2h_inflight
                     and not b.h2d_inflight
+                    and b.hbm_slot not in exclude_slots
                     and not (b.ref_ids & exclude_reqs)):
                 b.dram_slot = self._dram_free.pop()
                 b.d2h_inflight = True
@@ -741,8 +772,53 @@ class TwoTierBlockTable:
             self._dram_free.append(b.dram_slot)
         self._blocks.pop(b.block_id, None)
 
+    # -- pipelined-execution hazard check -----------------------------------------
+    def set_compute_rows(self, reads: Set[int], writes: Set[int]) -> None:
+        """Declare the HBM slots the CURRENT iteration's kernels touch.
+        ``reads`` = decode context rows + prefill rows already written;
+        ``writes`` = rows receiving new KV this iteration (decode tail
+        blocks, the prefill chunk's rows). The engine calls this right
+        before dispatching kernels and ``clear_compute_rows`` after the
+        iteration commits; while set, ``guard_compute`` (and
+        ``check_invariants``) assert no in-flight transfer races them."""
+        self.compute_reads = set(reads)
+        self.compute_writes = set(writes)
+        self.guard_compute()
+
+    def clear_compute_rows(self) -> None:
+        self.compute_reads = set()
+        self.compute_writes = set()
+
+    def guard_compute(self) -> None:
+        """Row-level transfer/compute hazard check (pipelined mode).
+
+        * An in-flight H2D is WRITING its HBM slot — compute may neither
+          read nor write that row until ``complete_swap_in``/promotion.
+        * An in-flight D2H is READING its HBM slot — compute may not WRITE
+          that row; concurrent compute READS are legal (eager rotation
+          reads synced, never-rewritten blocks — that concurrency is the
+          paper's point).
+        """
+        if not (self.compute_reads or self.compute_writes):
+            return
+        touched = self.compute_reads | self.compute_writes
+        for b in self._blocks.values():
+            if b.hbm_slot is None:
+                continue
+            if b.h2d_inflight and b.hbm_slot in touched:
+                raise RuntimeError(
+                    f"hazard: HBM slot {b.hbm_slot} (block {b.block_id}) is "
+                    "an in-flight H2D destination but is scheduled for "
+                    "compute this iteration")
+            if b.d2h_inflight and b.hbm_slot in self.compute_writes:
+                raise RuntimeError(
+                    f"hazard: HBM slot {b.hbm_slot} (block {b.block_id}) is "
+                    "being read by an in-flight D2H but compute writes it "
+                    "this iteration")
+
     # -- invariants (tested) ------------------------------------------------------
     def check_invariants(self) -> None:
+        self.guard_compute()
         hbm_used = set()
         dram_used = set()
         referenced: Dict[int, Set[int]] = {}

@@ -94,6 +94,10 @@ class IterationTransfers:
     eager_stats: Optional[TransferStats]
     swapout_done: List[int]       # req_ids whose D2H completed this iteration
     swapin_done: List[int]        # req_ids whose H2D completed this iteration
+    # pipelined-timeline metadata (core.py maps these onto PipelineTimeline
+    # dependency flags; meaningless — and ignored — in synchronous mode)
+    promo_blocks: int = 0         # DRAM-tier promotions riding this H2D
+    h2d_after_d2h: bool = False   # an H2D dst slot aliases a D2H src slot
 
 
 class DuplexKV:
@@ -115,6 +119,12 @@ class DuplexKV:
             batched_kernel=serving.batched_transfer_kernel,
             duplex=serving.duplex)
         self.eager = serving.eager_rotation and serving.duplex
+        # Cross-iteration pipeline: eager D2H issued during iteration N keeps
+        # its in-flight flags set while N's kernels execute (the copies
+        # stream under compute) and settles at the next plan_iteration. Sync
+        # mode settles within the iteration — bit-identical to the golden.
+        self.pipelined = bool(getattr(serving, "pipeline", False))
+        self._carry_eager: List[TransferDesc] = []
         self._chains: Dict[int, List[int]] = {}     # req_id -> prefix hashes
         self._promotions: List[TransferDesc] = []   # queued DRAM-hit H2D
         self.cache_lookup_tokens = 0                # prompt tokens probed
@@ -189,6 +199,30 @@ class DuplexKV:
     def releasable_hbm(self, req_id: int) -> int:
         return self.table.releasable_hbm_blocks_of(req_id)
 
+    # -- pipelined eager-carry ----------------------------------------------------
+    def _settle_carry(self, req_id: Optional[int] = None) -> None:
+        """Land eager D2H copies carried across an iteration boundary
+        (pipelined mode). ``req_id`` restricts settling to blocks that
+        request references — used by ``finish`` so a completing request's
+        blocks never free with a dangling in-flight flag (``_free_block``
+        would leak the DRAM slot). Blocks whose flag was already cleared by
+        another path (a preemption "let it land") just drop from the list;
+        the data moved physically at issue time either way."""
+        if not self._carry_eager:
+            return
+        keep: List[TransferDesc] = []
+        only = None
+        if req_id is not None:
+            only = {b.block_id for b in self.table.blocks_of(req_id)}
+        for d in self._carry_eager:
+            if only is not None and d.block_id not in only:
+                keep.append(d)
+                continue
+            b = self.table._blocks.get(d.block_id)
+            if b is not None and b.d2h_inflight:
+                self.table.complete_d2h(d.block_id)
+        self._carry_eager = keep
+
     # -- cross-replica migration ----------------------------------------------
     def can_export(self, req_id: int) -> bool:
         """Conservative capacity probe: enough free DRAM slots for the
@@ -215,6 +249,7 @@ class DuplexKV:
         arrays travel with the export: moved blocks are popped from this
         store (zero-copy), retained ones are handed off by reference (host
         rows are immutable once written — later writes rebind the slot)."""
+        self._settle_carry()    # migrations run between engine iterations
         descs = self.table.migrate_out(req_id)
         stats = (self.engine.execute(descs, []) if descs
                  else TransferStats())
@@ -265,12 +300,15 @@ class DuplexKV:
     # -- iteration planning ------------------------------------------------------
     def plan_iteration(self, preempt_reqs: Sequence[int],
                        swapin_reqs: Sequence[int],
-                       iteration_budget_s: float) -> IterationTransfers:
+                       iteration_budget_s: float,
+                       exclude_slots: Set[int] = frozenset()
+                       ) -> IterationTransfers:
         # Physical ordering contract (data backend attached): CoW D2D row
         # copies FIRST (their captured src slots may be re-issued as H2D
         # destinations below), then preempt D2H reads, then H2D writes.
         # Model execution (the executor's pool reads/writes) runs strictly
         # after plan_iteration, so every row lands before it is consumed.
+        self._settle_carry()    # last iteration's carried eager D2H lands now
         if self.data is not None:
             pending = self.table.drain_pending_d2d()
             if pending:
@@ -281,6 +319,7 @@ class DuplexKV:
         h2d: List[TransferDesc] = []
         for rid in preempt_reqs:
             d2h.extend(self.table.preempt(rid))
+        d2h_src = {d.src_slot for d in d2h}  # slots freed below may be reused
         if self.data is not None and d2h:
             self.data.run_d2h(d2h)           # read rows BEFORE slots free
         # swap-out transfers complete within the iteration (sim semantics);
@@ -289,6 +328,12 @@ class DuplexKV:
         # so the free pool is large and the two directions never alias.
         for rid in preempt_reqs:
             self.table.complete_swap_out(rid)
+        if self.pipelined and d2h_src:
+            # freed slots whose outbound D2H is still streaming go to the
+            # cold end of the free list — swap-ins take other slots first,
+            # so the directions stay genuinely full-duplex (no same-slot
+            # serialization unless HBM is completely exhausted)
+            self.table.deprioritize_slots(d2h_src)
         admitted: List[int] = []
         for rid in swapin_reqs:
             try:
@@ -313,22 +358,32 @@ class DuplexKV:
             budget_blocks = int(spare_s * cap / max(self.block_bytes, 1))
             if budget_blocks > 0:
                 descs = self.table.eager_candidates(
-                    budget_blocks, exclude_reqs=set(preempt_reqs))
+                    budget_blocks, exclude_reqs=set(preempt_reqs),
+                    exclude_slots=exclude_slots)
                 if descs:
                     eager_stats = self.engine.execute(descs, [])
                     if self.data is not None:
                         self.data.run_d2h(descs)
-                    for d in descs:
-                        self.table.complete_d2h(d.block_id)
+                    if self.pipelined:
+                        # flags stay set while this iteration's kernels run:
+                        # the copy streams under compute (reads-only — eager
+                        # blocks are synced and never rewritten) and settles
+                        # at the NEXT plan_iteration
+                        self._carry_eager.extend(descs)
+                    else:
+                        for d in descs:
+                            self.table.complete_d2h(d.block_id)
 
         # completions (the sim advances time; real mode would poll events)
         for d in promos:
             self.table.complete_promotion(d.block_id)
         for rid in swapin_reqs:
             self.table.complete_swap_in(rid)
-        return IterationTransfers(stats=stats, eager_stats=eager_stats,
-                                  swapout_done=list(preempt_reqs),
-                                  swapin_done=list(swapin_reqs))
+        return IterationTransfers(
+            stats=stats, eager_stats=eager_stats,
+            swapout_done=list(preempt_reqs), swapin_done=list(swapin_reqs),
+            promo_blocks=len(promos),
+            h2d_after_d2h=bool(d2h_src & {d.dst_slot for d in h2d}))
 
     # -- capacity API used by the engine/scheduler ---------------------------------
     @property
@@ -363,6 +418,7 @@ class DuplexKV:
         """Decref-and-retain: content-addressed blocks stay cached at
         refcount 0; everything else (and everything, with the cache off)
         frees immediately."""
+        self._settle_carry(req_id)   # land carried copies before blocks free
         self._chains.pop(req_id, None)
         self.table.release_request(req_id)
 

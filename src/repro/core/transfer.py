@@ -100,6 +100,76 @@ class TransferEngine:
         return 1.0 / per_block if per_block > 0 else float("inf")
 
 
+@dataclasses.dataclass
+class PipelineTimeline:
+    """Per-direction transfer channels that persist ACROSS engine iterations
+    (the cross-iteration pipeline, ``ServingConfig.pipeline``).
+
+    The synchronous model charges each iteration ``max(exec, transfer)``
+    independently: a transfer burst larger than one execution window stalls
+    the iteration that issued it, even though a full-duplex link would keep
+    streaming under the *following* iterations' compute. Here each direction
+    is a channel with a busy-until frontier; an iteration's planned
+    transfers occupy their channel from issue time (they were planned while
+    the previous iteration executed), and model execution starts as soon as
+    its true row dependencies allow:
+
+      * ``exec_needs_h2d`` — the batch reads rows this iteration's H2D
+        delivers (prefix-cache promotions feeding a prefill chunk);
+      * ``h2d_after_d2h`` — an H2D destination slot is still being read by
+        an in-flight D2H (slot reuse within the iteration): same-slot
+        traffic serializes, full-duplex or not;
+      * ``exec_needs_d2h`` — the batch WRITES a row an in-flight D2H is
+        reading (never in correct operation — the hazard check in
+        ``blocktable.guard_compute`` fires first — but the timeline stays
+        conservative if a caller models it);
+      * swap-ins resumed this iteration decode NEXT iteration, so the next
+        ``advance`` may not start compute before their H2D landed
+        (``dep_ready``).
+
+    ``advance`` returns ``(exec_end, overlap_s, stall_s)``: the wall time
+    the iteration's compute finishes (the engine's clock), the transfer
+    seconds hidden under the compute window, and the seconds compute sat
+    waiting on transfers (the visible stall).
+    """
+    d2h_free: float = 0.0      # D2H channel busy-until (wall time)
+    h2d_free: float = 0.0      # H2D channel busy-until (wall time)
+    dep_ready: float = 0.0     # earliest next compute start (row deps)
+
+    def advance(self, t: float, exec_s: float, d2h_s: float, h2d_s: float,
+                *, exec_needs_h2d: bool = False, h2d_after_d2h: bool = False,
+                exec_needs_d2h: bool = False, gates_next_exec: bool = False
+                ) -> Tuple[float, float, float]:
+        d2h_start = max(t, self.d2h_free)
+        d2h_end = d2h_start + d2h_s
+        if d2h_s > 0.0:
+            self.d2h_free = d2h_end
+        h2d_start = max(t, self.h2d_free)
+        if h2d_after_d2h and h2d_s > 0.0 and d2h_s > 0.0:
+            h2d_start = max(h2d_start, d2h_end)
+        h2d_end = h2d_start + h2d_s
+        if h2d_s > 0.0:
+            self.h2d_free = h2d_end
+        exec_start = max(t, self.dep_ready)
+        if exec_needs_h2d and h2d_s > 0.0:
+            exec_start = max(exec_start, h2d_end)
+        if exec_needs_d2h and d2h_s > 0.0:
+            exec_start = max(exec_start, d2h_end)
+        exec_end = exec_start + exec_s
+        if gates_next_exec and h2d_s > 0.0:
+            self.dep_ready = max(self.dep_ready, h2d_end)
+        # transfer seconds lying under this iteration's compute window
+        overlap = 0.0
+        if d2h_s > 0.0:
+            overlap += max(0.0, min(d2h_end, exec_end)
+                           - max(d2h_start, exec_start))
+        if h2d_s > 0.0:
+            overlap += max(0.0, min(h2d_end, exec_end)
+                           - max(h2d_start, exec_start))
+        stall = exec_start - t
+        return exec_end, overlap, stall
+
+
 def engine_for_flags(hw: HardwareProfile, *, block_first: bool,
                      batched_kernel: bool, duplex: bool) -> TransferEngine:
     """Map ServingConfig feature flags onto a Table-1 mode."""

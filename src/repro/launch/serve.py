@@ -124,6 +124,13 @@ def main(argv=None):
     ap.add_argument("--no-eager", action="store_true")
     ap.add_argument("--no-block-first", action="store_true")
     ap.add_argument("--no-pipeline", action="store_true")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="cross-iteration two-stage pipeline: per-direction "
+                         "transfer channels persist across iterations and "
+                         "compute serializes only on true row dependencies "
+                         "(token streams are identical to synchronous mode; "
+                         "schedule_ms/transfer_ms/execute_ms/overlap_ms land "
+                         "in the output)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
@@ -150,6 +157,7 @@ def main(argv=None):
         block_first_layout=not args.no_block_first,
         batched_transfer_kernel=not args.no_block_first,
         pipeline_overlap=not args.no_pipeline,
+        pipeline=args.pipeline,
         prefix_cache=(args.prefix_cache == "on"),
         paged_runner=args.paged_runner)
     hw = HW_PROFILES[args.hw]
@@ -230,7 +238,8 @@ def main(argv=None):
                aborted=stats.aborted,
                stall_time=round(stats.stall_time, 3),
                prefix_cache=args.prefix_cache,
-               prefill_tokens_executed=stats.prefill_tokens)
+               prefill_tokens_executed=stats.prefill_tokens,
+               pipeline=args.pipeline)
     if args.paged_runner:
         # per-replica executors: sum counters cluster-wide (replicas == 1
         # degenerates to the single engine's executor)

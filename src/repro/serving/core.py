@@ -20,12 +20,13 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.configs.base import (HardwareProfile, ModelConfig, ServingConfig,
                                 SLOConfig, GH200)
 from repro.core.blocktable import OutOfBlocks
 from repro.core.duplexkv import DuplexKV
+from repro.core.transfer import PipelineTimeline
 from repro.core.types import (FINISH_ABORTED, Request, RequestOutput,
                               RequestState, SamplingParams, resolve_slo_class)
 from repro.serving.executor import (BatchPlan, Executor, RealExecutorAdapter,
@@ -46,11 +47,25 @@ class EngineStats:
     dropped: int = 0
     aborted: int = 0                   # client cancellations (abort API)
     prefill_tokens: int = 0            # prompt tokens actually executed
+    # per-iteration timing breakdown (accumulated milliseconds), ALL
+    # modeled times — a real host-clock measurement here would make the
+    # otherwise deterministic report rows unreproducible across runs.
+    schedule_ms: float = 0.0           # host planning share (plan_time)
+    transfer_ms: float = 0.0           # transfer channel occupancy (+ eager)
+    execute_ms: float = 0.0            # kernel execution time
+    overlap_ms: float = 0.0            # transfer time hidden under compute
 
     def merged_with(self, other: "EngineStats") -> "EngineStats":
         return EngineStats(*(a + b for a, b in
                              zip(dataclasses.astuple(self),
                                  dataclasses.astuple(other))))
+
+    def timing_row(self) -> Dict[str, float]:
+        """The per-iteration timing breakdown, for SLOReport/serve.py."""
+        return dict(schedule_ms=self.schedule_ms,
+                    transfer_ms=self.transfer_ms,
+                    execute_ms=self.execute_ms,
+                    overlap_ms=self.overlap_ms)
 
 
 @dataclasses.dataclass
@@ -247,6 +262,16 @@ class EngineCore:
         self.stats = EngineStats()
         self.clock = 0.0
         self._exec_ema = 0.03   # for auto B_xfer sizing
+        # Cross-iteration two-stage pipeline (ServingConfig.pipeline): the
+        # per-direction transfer channels persist across step() calls and
+        # compute serializes only on true row dependencies. Scheduling
+        # decisions are UNCHANGED (each step still plans against the
+        # post-commit state of the previous one), so token streams are
+        # structurally identical to synchronous mode — only the clock math
+        # and the executor dispatch path differ.
+        self._pipeline = bool(serving.pipeline)
+        self._timeline = PipelineTimeline() if self._pipeline else None
+        self._pipe_warm = False   # pipeline filled: plan N+1 ran under exec N
         # Prefix caching requires block-level KV sharing on the device; the
         # dense per-request caches of the legacy RealExecutor cannot share,
         # so the cache is forced off under it. The paged runner CAN — its
@@ -430,6 +455,7 @@ class EngineCore:
         if not self.active:
             if self._pending:   # idle: jump to the next arrival
                 self.clock = self._pending[0][0]
+            self._pipe_warm = False   # pipeline drains across an idle gap
             return IterationOutcome(t_start=t, t_end=self.clock, idle=True)
 
         # -- schedule --------------------------------------------------------
@@ -474,12 +500,46 @@ class EngineCore:
 
         # -- execute + transfer (pipelined or serial) -----------------------
         exec_s = self.executor.step_time(plan)
-        xfers = self.kv.plan_iteration(adm.preempt_ids, adm.swapin_ids,
-                                       iteration_budget_s=exec_s)
+        # pipelined mode: the batch's read/write pool rows are known before
+        # transfers stage, so eager demotion can avoid rows the kernels
+        # WRITE this iteration (a logically-synced tail block's last token
+        # lands physically now — see blocktable.eager_candidates)
+        plan_rows = self._plan_rows(plan) if self._pipeline else None
+        xfers = self.kv.plan_iteration(
+            adm.preempt_ids, adm.swapin_ids, iteration_budget_s=exec_s,
+            exclude_slots=plan_rows[1] if plan_rows else frozenset())
+        self.stats.schedule_ms += self.executor.plan_time(plan) * 1e3
         tr_s = xfers.stats.e2e_time
-        if self.serving.pipeline_overlap:
+        eager_d2h = xfers.eager_stats.d2h_time if xfers.eager_stats else 0.0
+        if self._pipeline:
+            # Cross-iteration pipeline: this iteration's transfers occupy
+            # their per-direction channels from NOW (they were planned while
+            # the previous iteration executed) and keep streaming under the
+            # following iterations' compute; compute starts as soon as its
+            # true row dependencies allow. Eager demotions ride the D2H
+            # channel — reads of synced, never-rewritten rows, legal under
+            # concurrent compute (blocktable.guard_compute).
+            # after the pipeline fills, this iteration's host planning ran
+            # during the PREVIOUS iteration's execute window — its share of
+            # the fixed overhead leaves the critical path (the first
+            # iteration after an idle gap pays it: pipeline fill)
+            hidden_plan = (self.executor.plan_time(plan)
+                           if self._pipe_warm else 0.0)
+            end, ov, stall = self._timeline.advance(
+                t, max(exec_s - hidden_plan, 0.0),
+                xfers.stats.d2h_time + eager_d2h,
+                xfers.stats.h2d_time,
+                exec_needs_h2d=xfers.promo_blocks > 0,
+                h2d_after_d2h=xfers.h2d_after_d2h,
+                gates_next_exec=bool(xfers.swapin_done))
+            iter_s = max(end - t, 1e-4)
+            self.stats.stall_time += stall
+            self.stats.overlap_ms += (ov + hidden_plan) * 1e3
+            self._pipe_warm = True
+        elif self.serving.pipeline_overlap:
             iter_s = max(exec_s, tr_s, 1e-4)
             self.stats.stall_time += max(tr_s - exec_s, 0.0)
+            self.stats.overlap_ms += min(exec_s, tr_s) * 1e3
         else:
             iter_s = exec_s + tr_s + 0.001   # serial schedule+transfer
             self.stats.stall_time += tr_s
@@ -487,6 +547,8 @@ class EngineCore:
         self.stats.iterations += 1
         self.stats.exec_time += exec_s
         self.stats.transfer_time += tr_s
+        self.stats.execute_ms += exec_s * 1e3
+        self.stats.transfer_ms += (tr_s + eager_d2h) * 1e3
         self.stats.prefill_tokens += plan.prefill_tokens
         self._exec_ema = 0.9 * self._exec_ema + 0.1 * exec_s
         if xfers.eager_stats:
@@ -505,8 +567,19 @@ class EngineCore:
         # state and returns at most one sampled token per request (empty in
         # sim mode — oracle token accounting needs only the counts below).
         # Runs after plan_iteration so swap-in/promotion rows have landed in
-        # the physical pool before any kernel reads them.
-        result = self.executor.execute(plan, self._index)
+        # the physical pool before any kernel reads them. Pipelined mode
+        # declares the batch's pool rows first (the transfer/compute hazard
+        # guard — carried eager D2H may only RACE reads) and dispatches
+        # through execute_async: every launch enqueues without a host sync
+        # and wait() is the iteration's single sync point.
+        if self._pipeline:
+            self.kv.table.set_compute_rows(*plan_rows)
+            try:
+                result = self.executor.execute_async(plan, self._index).wait()
+            finally:
+                self.kv.table.clear_compute_rows()
+        else:
+            result = self.executor.execute(plan, self._index)
 
         new_count: Dict[int, int] = {}        # req_id -> tokens this iter
         new_ids: Dict[int, List[int]] = {}    # req_id -> their ids (real mode)
@@ -569,6 +642,35 @@ class EngineCore:
             preempted=adm.preempt_ids, finished=finished, outputs=outputs)
 
     # ------------------------------------------------------------------ utils
+    def _plan_rows(self, plan: BatchPlan) -> Tuple[Set[int], Set[int]]:
+        """HBM pool rows this iteration's kernels read / write — the hazard
+        declaration for pipelined mode (``blocktable.set_compute_rows``).
+        Writes: the decode tail block (the new token's K/V) and the prefill
+        chunk's rows; reads: every other assigned row (context)."""
+        P = self.serving.block_size
+        reads: Set[int] = set()
+        writes: Set[int] = set()
+        for rid in plan.decode_reqs:
+            r = self._by_id(rid)
+            if r is None:
+                continue
+            wi = (r.total_len - 1) // P
+            for i, b in enumerate(self.kv.table.blocks_of(rid)):
+                if b.hbm_slot is None:
+                    continue
+                (writes if i == wi else reads).add(b.hbm_slot)
+        for rid, take in plan.prefill_chunks:
+            r = self._by_id(rid)
+            if r is None or take <= 0:
+                continue
+            lo = r.prefill_pos // P
+            hi = (r.prefill_pos + take - 1) // P
+            for i, b in enumerate(self.kv.table.blocks_of(rid)):
+                if b.hbm_slot is None:
+                    continue
+                (writes if lo <= i <= hi else reads).add(b.hbm_slot)
+        return reads, writes
+
     def _ingest(self, t: float) -> None:
         while self._pending and self._pending[0][0] <= t:
             r = heapq.heappop(self._pending)[2]

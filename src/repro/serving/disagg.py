@@ -282,7 +282,8 @@ class DisaggCluster:
 
     # ---------------------------------------------------------------- reports
     def aggregate_report(self) -> SLOReport:
-        return evaluate(self._requests, total_time=self.clock)
+        return evaluate(self._requests, total_time=self.clock,
+                        timing=self.aggregate_stats().timing_row())
 
     def aggregate_stats(self) -> EngineStats:
         out = EngineStats()

@@ -124,7 +124,8 @@ class ServingEngine:
         return self.report()
 
     def report(self) -> SLOReport:
-        return evaluate(self.core.submitted, total_time=self.core.clock)
+        return evaluate(self.core.submitted, total_time=self.core.clock,
+                        timing=self.core.stats.timing_row())
 
     # ------------------------------------------------------- batch-replay API
     def run(self, requests: Sequence[Request], *,
@@ -134,4 +135,5 @@ class ServingEngine:
         for r in requests:
             self.core.submit(r)
         self.core.drain(max_time_s)
-        return evaluate(requests, total_time=self.core.clock)
+        return evaluate(requests, total_time=self.core.clock,
+                        timing=self.core.stats.timing_row())

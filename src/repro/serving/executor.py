@@ -50,6 +50,28 @@ class ExecutionResult:
     tokens: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
+class PendingExecution:
+    """Handle to an in-flight iteration's device work (the cross-iteration
+    pipeline's execute stage). ``execute_async`` dispatches the launches and
+    returns immediately; ``wait()`` materializes the sampled tokens — the
+    single host sync point of the iteration. ``waiter`` runs at most once;
+    repeated ``wait()`` calls return the cached result."""
+
+    def __init__(self, waiter):
+        self._waiter = waiter
+        self._result: Optional[ExecutionResult] = None
+
+    @property
+    def done(self) -> bool:
+        return self._waiter is None
+
+    def wait(self) -> ExecutionResult:
+        if self._waiter is not None:
+            waiter, self._waiter = self._waiter, None
+            self._result = waiter()
+        return self._result if self._result is not None else ExecutionResult()
+
+
 class Executor:
     """The engine-facing execution protocol (see module docstring).
 
@@ -63,12 +85,32 @@ class Executor:
     def step_time(self, plan: BatchPlan) -> float:
         raise NotImplementedError
 
+    def plan_time(self, plan: BatchPlan) -> float:
+        """Host-side planning/batch-assembly seconds INCLUDED in
+        ``step_time`` that a two-stage pipeline hides: iteration N+1's
+        scheduling runs while iteration N's kernels execute, so in
+        pipelined mode this portion leaves the critical path (after the
+        pipeline fills). Default 0 — executors that model no host
+        overhead have nothing to hide."""
+        return 0.0
+
     def execute(self, plan: BatchPlan, requests: Mapping[int, object]
                 ) -> ExecutionResult:
         """Run the plan's prefill chunks and decodes. ``requests`` maps
         req_id -> live Request in its PRE-commit state (``prefill_pos`` /
         ``generated_ids`` not yet advanced for this iteration)."""
         return ExecutionResult()
+
+    def execute_async(self, plan: BatchPlan, requests: Mapping[int, object]
+                      ) -> PendingExecution:
+        """Dispatch the plan's device work without blocking on results.
+        Implementations that can (PagedModelRunner) enqueue every launch via
+        JAX async dispatch and defer the host sync to ``wait()``; the
+        default wraps the synchronous ``execute`` so every executor
+        satisfies the pipelined engine's protocol. ``wait()`` must be
+        called strictly after the iteration's transfers were issued (the
+        ``plan_iteration`` ordering contract still holds)."""
+        return PendingExecution(lambda: self.execute(plan, requests))
 
     # -- lifecycle hooks (no-ops unless the executor holds per-request state)
     def swap_out(self, req_id: int) -> None:
@@ -106,6 +148,14 @@ class SimExecutor(Executor):
         t_mem = (self.weight_bytes
                  + plan.decode_kv_tokens * self.kv_per_token) / self.hw.hbm_bw
         return max(t_compute, t_mem) + self.fixed
+
+    def plan_time(self, plan: BatchPlan) -> float:
+        # Half the fixed per-iteration overhead is host work (scheduling,
+        # admission, batch assembly, transfer planning) that the two-stage
+        # pipeline runs during the PREVIOUS iteration's execute window; the
+        # other half (kernel launch, completion handling) stays on the
+        # critical path. Mirrors step_time's empty-plan halving.
+        return self.fixed / 2 if not plan.empty else self.fixed / 4
 
 
 class RealExecutor:
@@ -208,6 +258,9 @@ class RealExecutorAdapter(Executor):
 
     def step_time(self, plan: BatchPlan) -> float:
         return self.sim.step_time(plan)
+
+    def plan_time(self, plan: BatchPlan) -> float:
+        return self.sim.plan_time(plan)
 
     def execute(self, plan: BatchPlan, requests) -> ExecutionResult:
         from repro.core.types import RequestState

@@ -63,22 +63,32 @@ class SLOReport:
     # cluster-wide rate from the union of raw requests).
     prefix_hit_rate: float = 0.0
     prefill_tokens_saved: int = 0      # prompt tokens served from cache
+    # Per-iteration timing breakdown (accumulated ms across the engine's
+    # iterations; cluster reports sum the replicas' — EngineStats.timing_row
+    # feeds these via the ``timing`` kwarg). overlap_ms > 0 is the
+    # observable pipelining win (transfer time hidden under compute).
+    schedule_ms: float = 0.0
+    transfer_ms: float = 0.0
+    execute_ms: float = 0.0
+    overlap_ms: float = 0.0
     per_class: Dict[str, ClassReport] = dataclasses.field(default_factory=dict)
 
     def row(self) -> Dict[str, object]:
         return dataclasses.asdict(self)
 
 
-def merge_reports(groups: Sequence[Sequence[Request]],
-                  total_time: float) -> SLOReport:
+def merge_reports(groups: Sequence[Sequence[Request]], total_time: float,
+                  timing: Optional[Dict[str, float]] = None) -> SLOReport:
     """Aggregate per-replica request groups into one cluster-level report.
 
     Percentiles are not mergeable from per-replica summaries, so the merge
     recomputes every metric from the union of the raw requests; counts and
     attainment come out equal to the request-weighted combination of the
-    per-replica reports (tested in test_engine_core.py).
+    per-replica reports (tested in test_engine_core.py). ``timing`` is the
+    cluster-summed per-iteration breakdown (merged EngineStats).
     """
-    return evaluate([r for g in groups for r in g], total_time=total_time)
+    return evaluate([r for g in groups for r in g], total_time=total_time,
+                    timing=timing)
 
 
 def _attainment(requests: Sequence[Request]):
@@ -90,7 +100,8 @@ def _attainment(requests: Sequence[Request]):
     return live, done, ttft_ok, tbt_ok
 
 
-def evaluate(requests: Sequence[Request], *, total_time: float) -> SLOReport:
+def evaluate(requests: Sequence[Request], *, total_time: float,
+             timing: Optional[Dict[str, float]] = None) -> SLOReport:
     live, done, ttft_ok, tbt_ok = _attainment(requests)
     # TBT attainment: a request attains its TBT SLO if its mean TBT is within
     # the threshold (per-request accounting, like the paper); requests that
@@ -131,4 +142,8 @@ def evaluate(requests: Sequence[Request], *, total_time: float) -> SLOReport:
         n_no_token=n_live - len(done),
         prefix_hit_rate=cached_toks / prompt_toks if prompt_toks else 0.0,
         prefill_tokens_saved=cached_toks,
+        schedule_ms=timing.get("schedule_ms", 0.0) if timing else 0.0,
+        transfer_ms=timing.get("transfer_ms", 0.0) if timing else 0.0,
+        execute_ms=timing.get("execute_ms", 0.0) if timing else 0.0,
+        overlap_ms=timing.get("overlap_ms", 0.0) if timing else 0.0,
         per_class=per_class)

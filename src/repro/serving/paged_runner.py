@@ -36,7 +36,8 @@ import numpy as np
 
 from repro.configs.base import (GH200, HardwareProfile, ModelConfig,
                                 ServingConfig)
-from repro.serving.executor import ExecutionResult, Executor, SimExecutor
+from repro.serving.executor import (ExecutionResult, Executor,
+                                    PendingExecution, SimExecutor)
 
 
 def _pow2(n: int) -> int:
@@ -60,7 +61,8 @@ class PagedKVStore:
     """
 
     def __init__(self, cfg: ModelConfig, serving: ServingConfig, dtype,
-                 *, staging: int = 64, interpret: bool = True):
+                 *, staging: int = 64, interpret: bool = True,
+                 double_buffer: bool = False):
         import jax
         import jax.numpy as jnp
         if staging < 1 or staging & (staging - 1):
@@ -69,11 +71,32 @@ class PagedKVStore:
             # dynamic_update_slice would clamp — silently overwriting live
             # block rows
             raise ValueError(f"staging must be a power of two, got {staging}")
+        if double_buffer and staging < 4:
+            raise ValueError(
+                f"double_buffer splits staging into an H2D half and two D2H "
+                f"gather buffers; needs staging >= 4, got {staging}")
         L = cfg.num_layers
         P = serving.block_size
         self.nb = serving.num_hbm_blocks
         self.staging = staging
+        self.double_buffer = double_buffer
         self.trash_row = self.nb + staging
+        # Staging layout. Single-buffer (sync engine): both directions use
+        # the whole region, one chunk at a time, host readback immediately
+        # after each gather. Double-buffer (pipelined engine): H2D owns the
+        # TOP half so an upload/scatter for iteration N+1 never aliases a
+        # D2H gather still draining from iteration N; the BOTTOM half splits
+        # into two alternating gather buffers so chunk i's gather launch is
+        # issued before chunk i-1's host readback forces a sync (a software
+        # pipeline over the copy stream).
+        if double_buffer:
+            self.h2d_base = self.nb + staging // 2
+            self.h2d_chunk = staging // 2
+            self.d2h_chunk = staging // 4
+        else:
+            self.h2d_base = self.nb
+            self.h2d_chunk = staging
+            self.d2h_chunk = staging
         self.row_shape = (L, 2, P, cfg.num_kv_heads, cfg.head_dim)
         self.pool = jnp.zeros((self.nb + staging + 1,) + self.row_shape, dtype)
         self.host: Dict[int, np.ndarray] = {}      # dram_slot -> row array
@@ -91,8 +114,8 @@ class PagedKVStore:
             out = kv_copy_tpu(flat, src, dst, interpret=interpret)
             return out.reshape(pool.shape)
 
-        def _upload(pool, rows):   # contiguous write into the staging region
-            idx = (self.nb,) + (0,) * (pool.ndim - 1)
+        def _upload(pool, rows, base):   # contiguous write into staging
+            idx = (base,) + (0,) * (pool.ndim - 1)
             return jax.lax.dynamic_update_slice(pool, rows.astype(pool.dtype),
                                                 idx)
 
@@ -123,25 +146,45 @@ class PagedKVStore:
         self._copy_rows([p[0] for p in pairs], [p[1] for p in pairs])
         self.d2d_rows += len(pairs)
 
+    def _readback(self, base: int, chunk) -> None:
+        """Materialize gathered staging rows into the host tier. Forces a
+        host sync on the pool — in double-buffer mode this is deferred one
+        chunk so the next gather launch is already in the dispatch queue."""
+        n = len(chunk)
+        data = np.asarray(self.pool[base:base + n])
+        for j, d in enumerate(chunk):
+            self.host[d.dst_slot] = np.array(data[j])
+        self.d2h_rows += n
+
     def run_d2h(self, descs) -> None:
         """Device rows -> host tier: batched gather into staging (one
-        ``kv_copy_tpu`` launch), then ONE contiguous device->host copy."""
-        for i in range(0, len(descs), self.staging):
-            chunk = descs[i:i + self.staging]
-            n = len(chunk)
+        ``kv_copy_tpu`` launch), then ONE contiguous device->host copy.
+        Double-buffer mode alternates two gather buffers, reading chunk
+        i-1 back only after chunk i's gather is dispatched."""
+        q = self.d2h_chunk
+        pending = None                      # (base, chunk) awaiting readback
+        for i in range(0, len(descs), q):
+            chunk = descs[i:i + q]
+            base = self.nb + (q if self.double_buffer and (i // q) % 2
+                              else 0)
             self._copy_rows([d.src_slot for d in chunk],
-                            list(range(self.nb, self.nb + n)))
-            data = np.asarray(self.pool[self.nb:self.nb + n])
-            for j, d in enumerate(chunk):
-                self.host[d.dst_slot] = np.array(data[j])
-            self.d2h_rows += n
+                            list(range(base, base + len(chunk))))
+            if not self.double_buffer:
+                self._readback(base, chunk)
+                continue
+            if pending is not None:
+                self._readback(*pending)
+            pending = (base, chunk)
+        if pending is not None:
+            self._readback(*pending)
 
     def run_h2d(self, descs) -> None:
         """Host tier -> device rows: one contiguous host->device upload into
-        staging, then a batched ``kv_copy_tpu`` scatter into place."""
+        staging (the H2D half, in double-buffer mode), then a batched
+        ``kv_copy_tpu`` scatter into place."""
         import jax.numpy as jnp
-        for i in range(0, len(descs), self.staging):
-            chunk = descs[i:i + self.staging]
+        for i in range(0, len(descs), self.h2d_chunk):
+            chunk = descs[i:i + self.h2d_chunk]
             n = len(chunk)
             rows = []
             for d in chunk:
@@ -154,8 +197,9 @@ class PagedKVStore:
             np2 = _pow2(n)
             buf = np.zeros((np2,) + self.row_shape, rows[0].dtype)
             buf[:n] = np.stack(rows)
-            self.pool = self._jit_upload(self.pool, jnp.asarray(buf))
-            self._copy_rows(list(range(self.nb, self.nb + n)),
+            self.pool = self._jit_upload(self.pool, jnp.asarray(buf),
+                                         jnp.asarray(self.h2d_base, np.int32))
+            self._copy_rows(list(range(self.h2d_base, self.h2d_base + n)),
                             [d.dst_slot for d in chunk])
             self.h2d_rows += n
 
@@ -226,8 +270,9 @@ class PagedModelRunner(Executor):
         """Attach to the engine's DuplexKV: allocate the device pool sized
         to its block table and register as the physical data backend."""
         self.kv = kv
-        self.store = PagedKVStore(self.cfg, self.serving, self.dtype,
-                                  interpret=self.interpret)
+        self.store = PagedKVStore(
+            self.cfg, self.serving, self.dtype, interpret=self.interpret,
+            double_buffer=bool(getattr(self.serving, "pipeline", False)))
         kv.attach_data_backend(self.store)
 
     def _flatten_layers(self) -> List[dict]:
@@ -248,6 +293,9 @@ class PagedModelRunner(Executor):
     # ------------------------------------------------------ executor protocol
     def step_time(self, plan) -> float:
         return self.sim.step_time(plan)
+
+    def plan_time(self, plan) -> float:
+        return self.sim.plan_time(plan)
 
     def execute(self, plan, requests) -> ExecutionResult:
         from repro.core.types import RequestState
@@ -271,6 +319,45 @@ class PagedModelRunner(Executor):
         if dec:
             out.tokens.update(self._run_decode_batch(dec))
         return out
+
+    def execute_async(self, plan, requests) -> PendingExecution:
+        """Dispatch every launch of the iteration without a host sync: the
+        prefill-chunk argmaxes and the batched decode output stay on device
+        (JAX async dispatch keeps the queue full), and ``wait()`` pulls them
+        back in ONE ``device_get`` — the iteration's single sync point —
+        instead of one ``int()``/``np.asarray`` per chunk."""
+        import jax
+        from repro.core.types import RequestState
+        if self.store is None:
+            raise RuntimeError("PagedModelRunner.bind(kv) was never called")
+        pre: List[Tuple[int, object]] = []     # (req_id, device argmax)
+        for rid, take in plan.prefill_chunks:
+            r = requests.get(rid)
+            if r is None or r.prompt_ids is None:
+                continue
+            tok = self._run_prefill_chunk(r, take, defer=True)
+            if tok is not None:
+                pre.append((rid, tok))
+        dec = []
+        for rid in plan.decode_reqs:
+            r = requests.get(rid)
+            if (r is None or r.state != RequestState.RUNNING
+                    or not r.generated_ids):
+                continue
+            dec.append(r)
+        nxt = self._run_decode_batch(dec, defer=True) if dec else None
+
+        def waiter() -> ExecutionResult:
+            out = ExecutionResult()
+            toks, arr = jax.device_get(([t for _, t in pre], nxt))
+            for (rid, _), tok in zip(pre, toks):
+                out.tokens[rid] = int(tok)
+            if arr is not None:
+                out.tokens.update(
+                    {r.req_id: int(arr[i]) for i, r in enumerate(dec)})
+            return out
+
+        return PendingExecution(waiter)
 
     # rotation data movement rides the DuplexKV transfer descriptors (the
     # PagedKVStore backend); there is no per-request device state to move
@@ -297,7 +384,7 @@ class PagedModelRunner(Executor):
             rows.append(b.hbm_slot)
         return rows
 
-    def _run_prefill_chunk(self, r, take: int) -> Optional[int]:
+    def _run_prefill_chunk(self, r, take: int, defer: bool = False):
         import jax.numpy as jnp
         P = self.serving.block_size
         start = r.prefill_pos
@@ -322,10 +409,10 @@ class PagedModelRunner(Executor):
             jnp.asarray(take, jnp.int32), jnp.asarray(rows_p))
         self.prefill_chunks_run += 1
         if start + take >= r.prompt_len and r.tokens_generated == 0:
-            return int(tok)
+            return tok if defer else int(tok)   # defer: device array, no sync
         return None
 
-    def _run_decode_batch(self, dec) -> Dict[int, int]:
+    def _run_decode_batch(self, dec, defer: bool = False):
         import jax.numpy as jnp
         P = self.serving.block_size
         cls = [r.total_len - 1 for r in dec]
@@ -351,6 +438,8 @@ class PagedModelRunner(Executor):
         self.decode_batches += 1
         self.decode_tokens += len(dec)
         self.attn_launches += len(self._layers)
+        if defer:
+            return nxt                          # device array, no host sync
         nxt = np.asarray(nxt)
         return {r.req_id: int(nxt[i]) for i, r in enumerate(dec)}
 

@@ -269,7 +269,8 @@ class Router:
 
     def aggregate_report(self) -> SLOReport:
         return merge_reports([c.submitted for c in self.replicas],
-                             total_time=self.clock)
+                             total_time=self.clock,
+                             timing=self.aggregate_stats().timing_row())
 
     def aggregate_stats(self) -> EngineStats:
         out = EngineStats()

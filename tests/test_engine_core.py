@@ -58,7 +58,8 @@ def test_step_loop_matches_run_replay():
         eng_b.add_request(r)
     while eng_b.has_work and eng_b.clock < 200:
         eng_b.step()
-    rep_b = evaluate(reqs_b, total_time=eng_b.clock)
+    rep_b = evaluate(reqs_b, total_time=eng_b.clock,
+                     timing=eng_b.stats.timing_row())
 
     assert rep_a.row() == rep_b.row()
     assert eng_a.stats == eng_b.stats
@@ -95,7 +96,8 @@ def test_router_aggregate_equals_merged_replicas():
     agg = router.aggregate_report()
     per = router.per_replica_reports()
     merged = merge_reports([c.submitted for c in router.replicas],
-                           total_time=router.clock)
+                           total_time=router.clock,
+                           timing=router.aggregate_stats().timing_row())
     assert agg == merged
     assert agg.n == sum(p.n_routed for p in per) == len(reqs)
     assert agg.rotations == sum(p.report.rotations for p in per)

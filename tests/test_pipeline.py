@@ -1,0 +1,369 @@
+"""Pipelined engine (plan N+1 under exec N): --pipeline off golden replay,
+token parity with it ON under rotation + prefix cache and under disagg
+migration, row-level transfer/compute hazard enforcement, double-buffered
+staging round-trips, async execution handles, the timing breakdown, and a
+hypothesis fuzz interleaving step/abort/migrate with slot conservation."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import GH200, ServingConfig, get_config
+from repro.core.blocktable import (BlockLoc, TransferDesc, TwoTierBlockTable)
+from repro.core.migration import MigrationEngine
+from repro.core.types import Request, RequestState, SamplingParams
+from repro.serving.disagg import DisaggCluster
+from repro.serving.engine import ServingEngine
+from repro.serving.executor import ExecutionResult, PendingExecution
+from repro.serving.workload import generate_requests
+
+SIM_CFG = get_config("llama3-8b")
+
+
+def assert_conserved(table):
+    """Every HBM/DRAM slot is either held by exactly one block or free."""
+    table.check_invariants()
+    hbm_used = sum(1 for b in table._blocks.values()
+                   if b.hbm_slot is not None
+                   and (b.loc in (BlockLoc.HBM, BlockLoc.BOTH)
+                        or b.h2d_inflight))
+    dram_used = sum(1 for b in table._blocks.values()
+                    if b.dram_slot is not None
+                    and (b.loc in (BlockLoc.DRAM, BlockLoc.BOTH)
+                         or b.d2h_inflight))
+    assert hbm_used + len(table._hbm_free) == table.num_hbm_blocks, \
+        "HBM slot leak/double-free"
+    assert dram_used + len(table._dram_free) == table.num_dram_blocks, \
+        "DRAM slot leak/double-free"
+
+
+# ------------------------------------------------------ golden replay (off)
+
+def test_serve_pipeline_off_replays_golden():
+    """--pipeline defaults OFF and the sync path must stay bit-identical to
+    the PR 5 replay (same values the CI golden smoke pins)."""
+    from repro.launch.serve import main
+    row = main(["--rps", "20", "--duration", "10", "--json"])
+    golden = {"n": 200,
+              "p50_ttft": 0.07106629294746247,
+              "p99_ttft": 0.3495841457778218,
+              "throughput_tok_s": 1306.7410706432238,
+              "total_time_s": 30.602083992290844}
+    for k, want in golden.items():
+        assert row[k] == want, (k, row[k], want)
+    assert row["pipeline"] is False
+
+
+def test_serve_pipeline_on_beats_golden_sync_time():
+    """Same trace with --pipeline: planning/transfer time leaves the
+    critical path, so simulated serving time drops below the sync replay
+    and the overlap accounting is visible in the report row."""
+    from repro.launch.serve import main
+    row = main(["--rps", "20", "--duration", "10", "--pipeline", "--json"])
+    assert row["pipeline"] is True
+    assert row["n"] == 200
+    assert row["total_time_s"] < 30.602083992290844
+    assert row["overlap_ms"] > 0
+    assert row["schedule_ms"] > 0 and row["execute_ms"] > 0
+
+
+# -------------------------------------------------------- sim-mode overlap
+
+def test_sim_pipeline_timing_breakdown_and_speedup():
+    reqs = generate_requests("sharegpt", rps=20, duration_s=4, seed=3)
+    out = {}
+    for pipe in (False, True):
+        sv = ServingConfig(num_hbm_blocks=600, num_dram_blocks=100000,
+                           scheduler="rotasched", pipeline=pipe)
+        eng = ServingEngine(SIM_CFG, sv, GH200)
+        rep = eng.run([dataclasses.replace(r) for r in reqs],
+                      max_time_s=600)
+        out[pipe] = (rep, eng)
+        assert rep.schedule_ms > 0 and rep.execute_ms > 0
+        assert rep.transfer_ms > 0, "no rotation traffic — weak config"
+        assert_conserved(eng.kv.table)
+    sync_rep, pipe_rep = out[False][0], out[True][0]
+    assert pipe_rep.n == sync_rep.n
+    assert pipe_rep.total_time_s < sync_rep.total_time_s
+    assert pipe_rep.overlap_ms > sync_rep.overlap_ms > 0
+    # the report row carries the breakdown (engine.report wiring)
+    row = out[True][1].report().row()
+    assert row["overlap_ms"] == pipe_rep.overlap_ms
+
+
+# -------------------------------------------- paged token parity (rotation)
+
+def test_paged_pipeline_token_parity_under_rotation_and_prefix_cache():
+    """Real execution: pipelined + tight HBM (rows physically round-trip
+    through the host tier) + shared prefix must produce exactly the token
+    streams of the synchronous engine with ample memory (rotation is
+    lossless by the test_paged_runner pins, so any difference indicts the
+    async-dispatch / double-buffer / eager-carry machinery)."""
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              dtype="float32")
+    rng = np.random.default_rng(7)
+    pref = [int(x) for x in rng.integers(1, cfg.vocab_size, 12)]
+    reqs = []
+    for i in range(5):
+        plen = int(rng.integers(8, 16))
+        ids = pref + [int(x) for x in rng.integers(1, cfg.vocab_size, plen)]
+        reqs.append(dict(req_id=i, arrival_time=0.02 * i,
+                         prompt_len=len(ids),
+                         output_len=int(rng.integers(10, 16)),
+                         prompt_ids=ids))
+    out = {}
+    for pipe, hbm in ((False, 2048), (True, 14)):
+        sv = ServingConfig(num_hbm_blocks=hbm, num_dram_blocks=512,
+                           scheduler="rotasched", block_size=4,
+                           max_model_len=64, prefill_chunk=8,
+                           paged_runner=True, prefix_cache=True,
+                           pipeline=pipe)
+        eng = ServingEngine(cfg, sv, GH200, runner_cfg=cfg, runner_seed=1)
+        for kw in reqs:
+            eng.add_request(Request(**kw))
+        eng.drain(max_time_s=500)
+        assert_conserved(eng.kv.table)
+        rot = eng.stats.active_rotations + eng.stats.passive_preemptions
+        out[pipe] = ({r.req_id: list(r.generated_ids)
+                      for r in eng.core.submitted}, eng, rot)
+    assert out[True][2] > 0, "pipelined run did not rotate — vacuous test"
+    assert out[True][1].stats.overlap_ms > 0
+    assert out[True][1].kv.cache_counters()["cache_hit_tokens"] > 0
+    assert out[True][0] == out[False][0], \
+        "pipelined paged execution changed the token streams"
+    # double buffering was actually engaged and moved rows both ways
+    store = out[True][1].core.executor.store
+    assert store.double_buffer and store.d2h_rows > 0 and store.h2d_rows > 0
+
+
+# ------------------------------------------- disagg token parity (migration)
+
+def test_disagg_pipeline_token_parity_with_migration():
+    """Pipelined disagg cluster: migrated requests decode to exactly the
+    tokens of synchronous colocated execution (KV rides eager-carry D2H ->
+    host handoff -> H2D across replicas)."""
+    tiny = dataclasses.replace(get_config("llama3-8b").reduced(),
+                               dtype="float32")
+    rng = np.random.default_rng(11)
+    reqs = []
+    for i in range(4):
+        plen = int(rng.integers(8, 14))
+        reqs.append(Request(
+            req_id=i, arrival_time=0.05 * i, prompt_len=plen,
+            output_len=int(rng.integers(5, 8)),
+            prompt_ids=[int(x) for x in
+                        rng.integers(1, tiny.vocab_size, plen)]))
+
+    def clone(rs):
+        return [dataclasses.replace(r, generated_ids=[], token_times=[])
+                for r in rs]
+
+    sv_sync = ServingConfig(num_hbm_blocks=256, num_dram_blocks=512,
+                            block_size=4, max_model_len=64,
+                            prefill_chunk=16, paged_runner=True)
+    eng = ServingEngine(tiny, sv_sync, GH200, runner_cfg=tiny, runner_seed=7)
+    for r in clone(reqs):
+        eng.submit(r)
+    eng.drain(max_time_s=500)
+    ref = {r.req_id: list(r.generated_ids) for r in eng.core.submitted}
+    assert all(ref.values())
+
+    sv_pipe = dataclasses.replace(sv_sync, pipeline=True)
+    dc = DisaggCluster(tiny, sv_pipe, GH200, prefill_replicas=1,
+                       decode_replicas=1, runner_cfg=tiny, runner_seed=7)
+    dreqs = clone(reqs)
+    rep = dc.run(dreqs, max_time_s=500)
+    assert rep.migrations > 0, "no handoff exercised — test is vacuous"
+    assert rep.overlap_ms > 0          # cluster-merged timing breakdown
+    got = {r.req_id: list(r.generated_ids) for r in dreqs}
+    assert got == ref
+    for core in dc.replicas:
+        assert_conserved(core.kv.table)
+
+
+# ------------------------------------------------------------- hazard guard
+
+def _table(hbm=8, dram=8):
+    return TwoTierBlockTable(hbm, dram, block_bytes=4 << 20,
+                             segments_per_block=1)
+
+
+def test_hazard_h2d_inflight_blocks_compute_read_and_write():
+    t = _table()
+    t.alloc(1, 2)
+    b = t.blocks_of(1)[0]
+    b.h2d_inflight = True
+    with pytest.raises(RuntimeError, match="in-flight H2D"):
+        t.set_compute_rows({b.hbm_slot}, set())
+    t.clear_compute_rows()
+    with pytest.raises(RuntimeError, match="in-flight H2D"):
+        t.set_compute_rows(set(), {b.hbm_slot})
+    t.clear_compute_rows()
+    b.h2d_inflight = False
+    t.set_compute_rows({b.hbm_slot}, set())    # clean rows pass
+    t.clear_compute_rows()
+
+
+def test_hazard_d2h_inflight_blocks_compute_write_but_not_read():
+    t = _table()
+    t.alloc(1, 2)
+    b = t.blocks_of(1)[0]
+    b.d2h_inflight = True
+    # read-read concurrency is legal: eager rotation streams out a synced
+    # block while attention reads it — the paper's overlap
+    t.set_compute_rows({b.hbm_slot}, set())
+    t.clear_compute_rows()
+    with pytest.raises(RuntimeError, match="in-flight D2H"):
+        t.set_compute_rows(set(), {b.hbm_slot})
+    # check_invariants enforces the same guard while rows are declared
+    with pytest.raises(RuntimeError, match="in-flight D2H"):
+        t.check_invariants()
+    t.clear_compute_rows()
+
+
+# -------------------------------------------------- double-buffered staging
+
+def test_double_buffer_staging_requires_capacity():
+    import jax.numpy as jnp
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              dtype="float32")
+    sv = ServingConfig(num_hbm_blocks=8, num_dram_blocks=32, block_size=4,
+                       max_model_len=64)
+    from repro.serving.paged_runner import PagedKVStore
+    with pytest.raises(ValueError, match="double_buffer"):
+        PagedKVStore(cfg, sv, jnp.float32, staging=2, double_buffer=True)
+
+
+def test_double_buffer_roundtrip_preserves_rows():
+    """D2H through the two alternating gather buffers, then H2D through the
+    reserved upload half, must reproduce every row bit-exactly."""
+    import jax.numpy as jnp
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              dtype="float32")
+    sv = ServingConfig(num_hbm_blocks=16, num_dram_blocks=64, block_size=4,
+                       max_model_len=64)
+    from repro.serving.paged_runner import PagedKVStore
+    store = PagedKVStore(cfg, sv, jnp.float32, staging=8, double_buffer=True)
+    assert store.d2h_chunk == 2 and store.h2d_chunk == 4
+    assert store.h2d_base == store.nb + 4
+    rng = np.random.default_rng(0)
+    n = 5                                   # > 2 chunks: exercises alternation
+    rows = rng.normal(size=(n,) + store.row_shape).astype(np.float32)
+    for i in range(n):
+        store.pool = store.pool.at[i].set(rows[i])
+
+    def d(i, direction, src, dst):
+        return TransferDesc(block_id=i, req_id=0, direction=direction,
+                            src_slot=src, dst_slot=dst, nbytes=1,
+                            segments=1)
+
+    store.run_d2h([d(i, "d2h", i, 100 + i) for i in range(n)])
+    for i in range(n):
+        np.testing.assert_array_equal(store.host[100 + i], rows[i])
+    # upload back into DIFFERENT device rows, through the H2D half
+    store.run_h2d([d(i, "h2d", 100 + i, 8 + i) for i in range(n)])
+    got = np.asarray(store.pool[8:8 + n])
+    np.testing.assert_array_equal(got, rows)
+    assert store.d2h_rows == n and store.h2d_rows == n
+
+
+# --------------------------------------------------------- async execution
+
+def test_pending_execution_waiter_runs_once():
+    calls = []
+
+    def waiter():
+        calls.append(1)
+        return ExecutionResult(tokens={1: 42})
+
+    p = PendingExecution(waiter)
+    assert not p.done
+    assert p.wait().tokens == {1: 42}
+    assert p.done
+    assert p.wait().tokens == {1: 42}
+    assert calls == [1]
+
+
+def test_default_execute_async_wraps_sync_execute():
+    from repro.serving.executor import SimExecutor
+    ex = SimExecutor(SIM_CFG, GH200)
+    from repro.serving.executor import BatchPlan
+    res = ex.execute_async(BatchPlan(), {}).wait()
+    assert isinstance(res, ExecutionResult) and res.tokens == {}
+    assert ex.plan_time(BatchPlan()) > 0
+
+
+# ------------------------------------------------------------- fuzz (sim)
+
+def _fuzz_run(ops):
+    """Arbitrary interleavings of submission, stepping, aborts, and
+    cross-engine migration under the pipelined loop never leak a slot,
+    never trip the hazard guard, and settle every carried eager flag."""
+    sv = ServingConfig(num_hbm_blocks=24, num_dram_blocks=200,
+                       scheduler="rotasched", block_size=4,
+                       prefix_cache=True, pipeline=True)
+    a = ServingEngine(SIM_CFG, sv, GH200).core
+    b = ServingEngine(SIM_CFG, sv, GH200).core
+    mig = MigrationEngine()
+    rid = 0
+    for op, arg in ops:
+        if op == "submit":
+            a.add_request(prompt_len=8 + 4 * arg,
+                          sampling_params=SamplingParams(max_tokens=4 + arg),
+                          req_id=rid)
+            rid += 1
+        elif op == "step_a" and a.has_work:
+            a.step()
+        elif op == "step_b" and b.has_work:
+            b.step()
+        elif op == "abort":
+            known = sorted(a._index) + sorted(b._index)
+            if known:
+                target = known[arg % len(known)]
+                (a if target in a._index else b).abort(target)
+        elif op == "migrate":
+            cands = [r for r in a.active
+                     if r.state in (RequestState.RUNNING,
+                                    RequestState.ROTARY)
+                     and r.prefill_done and r.tokens_generated >= 1
+                     and not r.done]
+            if cands and mig.can_migrate(cands[0].req_id, a.kv, b.kv):
+                r = cands[0]
+                rec = mig.migrate(r.req_id, a.kv, b.kv, a.clock)
+                a.detach_request(r.req_id)
+                r.begin_migration()
+                b.adopt_request(r, arrival_time=rec.t_ready)
+        assert_conserved(a.kv.table)
+        assert_conserved(b.kv.table)
+    for core in (a, b):
+        core.drain(max_time_s=2000)
+        assert_conserved(core.kv.table)
+        assert not core.kv._carry_eager, "eager D2H flags left unsettled"
+
+
+_FUZZ_OPS = ["submit", "step_a", "step_b", "abort", "migrate"]
+
+
+def test_fuzz_pipelined_step_abort_migrate_conserves_slots():
+    try:
+        import hypothesis.strategies as st
+        from hypothesis import given, settings
+    except ImportError:
+        # no hypothesis in this environment: seeded random interleavings
+        # exercise the same invariants (CI installs hypothesis and takes
+        # the property-based path below)
+        for seed in range(6):
+            rng = np.random.default_rng(seed)
+            ops = [(str(rng.choice(_FUZZ_OPS)), int(rng.integers(0, 10)))
+                   for _ in range(int(rng.integers(8, 40)))]
+            _fuzz_run(ops)
+        return
+
+    @given(st.lists(st.tuples(st.sampled_from(_FUZZ_OPS),
+                              st.integers(0, 9)),
+                    min_size=8, max_size=40))
+    @settings(max_examples=12, deadline=None)
+    def run(ops):
+        _fuzz_run(ops)
+
+    run()
