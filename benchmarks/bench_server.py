@@ -1,0 +1,149 @@
+"""Serving front door under closed-loop load: client-observed TTFT/TBT
+percentiles vs concurrent client count.
+
+Unlike the simulation benchmarks (which measure *engine-clock* latency from
+the SLOReport), this one measures what a caller of the HTTP API actually
+sees: wall-clock time from POST to the first streamed event, and between
+events, through the full stack — socket, asyncio handlers, the driver-thread
+bridge, and the wall-paced engine. Each client is closed-loop (next request
+starts when the previous stream finishes), so client count is the offered
+concurrency.
+
+CSV: clients, n_requests, tokens, p50/p99 TTFT ms, p50/p99 TBT ms, tok/s.
+"""
+import asyncio
+import json
+import socket
+import sys
+import threading
+import time
+
+from repro.serving.server import ServerConfig, serve_main
+
+QUICK = "--quick" in sys.argv
+CLIENTS_GRID = (1, 4, 8) if QUICK else (1, 2, 4, 8, 16)
+LEVEL_SECONDS = 4.0 if QUICK else 8.0
+MAX_TOKENS = 12
+PROMPT_LEN = 128
+
+
+def pct(xs, q):
+    if not xs:
+        return float("nan")
+    xs = sorted(xs)
+    i = min(len(xs) - 1, int(round(q / 100 * (len(xs) - 1))))
+    return xs[i]
+
+
+class _Server:
+    """serve_main on a daemon thread (same harness as tests/test_server)."""
+
+    def __init__(self, cfg):
+        self.cfg, self._ready = cfg, threading.Event()
+        self.server = self.loop = None
+        self._t = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self):
+        def ready(server, service):
+            self.server, self.loop = server, asyncio.get_running_loop()
+            self._ready.set()
+        try:
+            asyncio.run(serve_main(self.cfg, install_signals=False,
+                                   ready_cb=ready))
+        finally:
+            self._ready.set()
+
+    def __enter__(self):
+        self._t.start()
+        assert self._ready.wait(60) and self.server is not None
+        return self
+
+    def __exit__(self, *exc):
+        self.loop.call_soon_threadsafe(self.server.request_shutdown)
+        self._t.join(60)
+
+
+def one_stream(port, ttfts, tbts, counters):
+    """One POST /v1/generate, streamed; appends wall latencies."""
+    body = json.dumps({"prompt_len": PROMPT_LEN,
+                       "max_tokens": MAX_TOKENS}).encode()
+    head = (f"POST /v1/generate HTTP/1.1\r\nHost: b\r\n"
+            f"Content-Length: {len(body)}\r\n\r\n").encode()
+    t0 = time.monotonic()
+    t_prev = None
+    with socket.create_connection(("127.0.0.1", port), timeout=60) as s:
+        s.sendall(head + body)
+        buf, seen = b"", 0
+        while True:
+            chunk = s.recv(65536)
+            if not chunk:
+                return
+            buf += chunk
+            while (i := buf.find(b"data: ")) != -1:
+                j = buf.find(b"\n\n", i)
+                if j == -1:
+                    break
+                evt = json.loads(buf[i + 6:j])
+                buf = buf[j + 2:]
+                now = time.monotonic()
+                seen += evt["new_tokens"]
+                if t_prev is None:
+                    ttfts.append(now - t0)
+                else:
+                    tbts.append(now - t_prev)
+                t_prev = now
+                if evt["finished"]:
+                    counters["requests"] += 1
+                    counters["tokens"] += seen
+                    return
+
+
+def run_level(port, n_clients, seconds):
+    ttfts, tbts = [], []
+    counters = {"requests": 0, "tokens": 0}
+    lock = threading.Lock()
+    deadline = time.monotonic() + seconds
+
+    def client():
+        my_ttft, my_tbt = [], []
+        my_counts = {"requests": 0, "tokens": 0}
+        while time.monotonic() < deadline:
+            one_stream(port, my_ttft, my_tbt, my_counts)
+        with lock:
+            ttfts.extend(my_ttft)
+            tbts.extend(my_tbt)
+            for k in counters:
+                counters[k] += my_counts[k]
+
+    threads = [threading.Thread(target=client) for _ in range(n_clients)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.monotonic() - t0
+    return dict(clients=n_clients, n_requests=counters["requests"],
+                tokens=counters["tokens"],
+                p50_ttft_ms=1e3 * pct(ttfts, 50),
+                p99_ttft_ms=1e3 * pct(ttfts, 99),
+                p50_tbt_ms=1e3 * pct(tbts, 50),
+                p99_tbt_ms=1e3 * pct(tbts, 99),
+                tok_s=counters["tokens"] / wall if wall else 0.0)
+
+
+def main():
+    cfg = ServerConfig(port=0, model="qwen2.5-32b", replicas=2,
+                       pipeline=True, pace=True, drain_timeout=20.0,
+                       hbm_blocks=2000, dram_blocks=20000).validate()
+    cols = ("clients", "n_requests", "tokens", "p50_ttft_ms", "p99_ttft_ms",
+            "p50_tbt_ms", "p99_tbt_ms", "tok_s")
+    print(",".join(cols))
+    with _Server(cfg) as srv:
+        for n in CLIENTS_GRID:
+            row = run_level(srv.server.port, n, LEVEL_SECONDS)
+            print(",".join(f"{row[c]:.2f}" if isinstance(row[c], float)
+                           else str(row[c]) for c in cols), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ MODULES = [
     ("paged_decode", "benchmarks.bench_paged_decode"),
     ("disagg", "benchmarks.bench_disagg"),
     ("pipeline", "benchmarks.bench_pipeline"),
+    ("server", "benchmarks.bench_server"),
 ]
 
 

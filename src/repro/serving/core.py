@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import time
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.configs.base import (HardwareProfile, ModelConfig, ServingConfig,
@@ -31,7 +32,7 @@ from repro.core.types import (FINISH_ABORTED, Request, RequestOutput,
                               RequestState, SamplingParams, resolve_slo_class)
 from repro.serving.executor import (BatchPlan, Executor, RealExecutorAdapter,
                                     SimExecutor)
-from repro.serving.outputs import OutputCollector, RequestHandle
+from repro.serving.outputs import DriverClaim, OutputCollector, RequestHandle
 from repro.serving.schedulers import Scheduler, make_scheduler
 
 
@@ -289,6 +290,9 @@ class EngineCore:
         self._index: Dict[int, Request] = {}   # req_id -> live request (O(1))
         self._next_req_id = 0                  # auto ids for add_request()
         self.collector = OutputCollector()
+        # Exclusive-driver ownership: while claimed (serving.async_engine),
+        # synchronous pumps/drains refuse to advance the engine.
+        self.driver_claim = DriverClaim()
 
     # ------------------------------------------------------------- online API
     def add_request(self, prompt_len: Optional[int] = None, *,
@@ -423,6 +427,7 @@ class EngineCore:
 
     def _pump(self) -> bool:
         """Advance one iteration on behalf of a streaming handle."""
+        self.driver_claim.require("RequestHandle pump (stream()/result())")
         if not self.has_work:
             return False
         self.step()
@@ -444,8 +449,36 @@ class EngineCore:
                    if not r.prefill_done)
 
     def drain(self, max_time_s: float = 1e9) -> None:
+        """Replay-time drain: step until idle or the ENGINE clock (simulated
+        seconds) passes ``max_time_s``. Unsuitable for graceful shutdown of
+        an online service — a backlogged engine can simulate far less than
+        wall time in ``max_time_s`` wall seconds; use ``drain_wallclock``."""
+        self.driver_claim.require("drain()")
         while self.has_work and self.clock < max_time_s:
             self.step()
+
+    def drain_wallclock(self, timeout_s: float, *, owner=None, on_step=None,
+                        now=None) -> List[int]:
+        """Wall-clock-bounded drain for graceful shutdown: step until idle
+        or ``timeout_s`` HOST seconds elapse (measured with
+        ``time.monotonic``), regardless of how much simulated time each
+        iteration models. Returns the req_ids still unfinished at the
+        deadline (empty list = clean drain). ``on_step(outcome)`` fires
+        after every iteration so a streaming front-end can keep delivering
+        tokens while draining; ``owner`` identifies the exclusive driver
+        when one holds the claim."""
+        now = now or time.monotonic
+        self.driver_claim.require("drain_wallclock()", owner=owner)
+        deadline = now() + timeout_s
+        while self.has_work and now() < deadline:
+            out = self.step()
+            if on_step is not None:
+                on_step(out)
+        return self.live_request_ids()
+
+    def live_request_ids(self) -> List[int]:
+        """req_ids still pending or active (not finished/aborted), sorted."""
+        return sorted(self._index)
 
     # ------------------------------------------------------------- iteration
     def step(self) -> IterationOutcome:

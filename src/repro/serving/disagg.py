@@ -38,6 +38,7 @@ constructible here). ``--disagg`` in ``launch.serve`` is the CLI surface.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional, Sequence, Set
 
 from repro.configs.base import (HardwareProfile, ModelConfig, ServingConfig,
@@ -47,6 +48,7 @@ from repro.core.types import (Request, RequestState, SamplingParams,
                               resolve_slo_class)
 from repro.serving.core import EngineCore, EngineStats, IterationOutcome
 from repro.serving.metrics import SLOReport, evaluate
+from repro.serving.outputs import DriverClaim
 
 PREFILL_POOL = "prefill"
 DECODE_POOL = "decode"
@@ -90,6 +92,7 @@ class DisaggCluster:
         self._no_migrate: Set[int] = set()          # colocated requests
         self.colocated_prefills = 0                 # dispatch-time fallbacks
         self._next_req_id = 0
+        self.driver_claim = DriverClaim()           # exclusive-driver ownership
 
     # ------------------------------------------------------------- placement
     def _choose_prefill(self, req: Request) -> EngineCore:
@@ -196,6 +199,7 @@ class DisaggCluster:
         return core.abort(req_id)
 
     def _pump(self) -> bool:
+        self.driver_claim.require("RequestHandle pump (stream()/result())")
         return self.step() is not None
 
     # -------------------------------------------------------------- stepping
@@ -228,9 +232,30 @@ class DisaggCluster:
         return max(c.clock for c in self.replicas)
 
     def drain(self, max_time_s: float = 1e9) -> None:
+        self.driver_claim.require("drain()")
         while self.has_work and self.clock < max_time_s:
             if self.step() is None:
                 break
+
+    def drain_wallclock(self, timeout_s: float, *, owner=None, on_step=None,
+                        now=None) -> List[int]:
+        """Wall-clock-bounded cluster drain (graceful shutdown); see
+        EngineCore.drain_wallclock. Returns unfinished req_ids across both
+        pools."""
+        now = now or time.monotonic
+        self.driver_claim.require("drain_wallclock()", owner=owner)
+        deadline = now() + timeout_s
+        while self.has_work and now() < deadline:
+            out = self.step()
+            if out is None:
+                break
+            if on_step is not None:
+                on_step(out)
+        return self.live_request_ids()
+
+    def live_request_ids(self) -> List[int]:
+        return sorted(rid for c in self.replicas
+                      for rid in c.live_request_ids())
 
     def run(self, requests: Sequence[Request], *,
             max_time_s: float = 1e9) -> SLOReport:

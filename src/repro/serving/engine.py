@@ -80,6 +80,11 @@ class ServingEngine:
         return self.core.stats
 
     @property
+    def driver_claim(self):
+        """Exclusive-driver ownership token (see serving.outputs)."""
+        return self.core.driver_claim
+
+    @property
     def clock(self) -> float:
         return self.core.clock
 
@@ -122,6 +127,11 @@ class ServingEngine:
         """Step until every submitted request finished; return the report."""
         self.core.drain(max_time_s)
         return self.report()
+
+    def drain_wallclock(self, timeout_s: float, **kw):
+        """Wall-clock-bounded drain for graceful shutdown; returns the
+        req_ids still unfinished at the deadline (EngineCore.drain_wallclock)."""
+        return self.core.drain_wallclock(timeout_s, **kw)
 
     def report(self) -> SLOReport:
         return evaluate(self.core.submitted, total_time=self.core.clock,

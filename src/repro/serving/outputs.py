@@ -18,6 +18,18 @@ Handles attached to a Router pump the whole cluster (lagging-replica order),
 so two handles on different replicas can be consumed concurrently from one
 thread. ``abort()`` cancels mid-stream; the final event then carries
 ``finish_reason == "aborted"``.
+
+Single-pump ownership
+---------------------
+Handle pumps and the legacy batch drivers (``drain()`` / ``run(trace)``)
+assume they are the ONLY thing advancing the engine. Once a concurrent
+driver exists (serving.async_engine owns the step loop on its own thread),
+a synchronous pump racing it would interleave two drivers through the same
+mutable engine — silently, and with corrupted block accounting. Every
+engine-like object therefore carries a ``DriverClaim``: an exclusive driver
+claims it before stepping, and every synchronous pump surface
+(``RequestHandle.stream()/result()`` via ``_pump``, ``drain()``, ``run()``)
+raises a clear ``RuntimeError`` naming the owner instead of interleaving.
 """
 from __future__ import annotations
 
@@ -29,6 +41,40 @@ from repro.core.types import Request, RequestOutput, RequestState
 # Pump: advance the engine/cluster by one iteration; False = no work left.
 Pump = Callable[[], bool]
 AbortFn = Callable[[int], bool]
+
+
+class DriverClaim:
+    """Exclusive-driver token for an engine-like object (EngineCore, Router,
+    DisaggCluster). At most one driver may hold the claim; while held, the
+    synchronous pump surfaces must refuse to advance the engine (see
+    module docstring). ``require`` is the guard those surfaces call."""
+
+    def __init__(self):
+        self.owner: Optional[str] = None
+
+    def claim(self, owner: str) -> None:
+        if self.owner is not None:
+            raise RuntimeError(
+                f"engine is already driven exclusively by {self.owner!r}; "
+                f"a second driver ({owner!r}) would interleave two step "
+                f"loops through the same engine")
+        self.owner = owner
+
+    def release(self, owner: str) -> None:
+        if self.owner != owner:
+            raise RuntimeError(
+                f"driver claim held by {self.owner!r}, not {owner!r}")
+        self.owner = None
+
+    def require(self, what: str, owner: Optional[str] = None) -> None:
+        """Raise unless unclaimed or called on behalf of the claim holder.
+        ``what`` names the refused operation in the error message."""
+        if self.owner is not None and self.owner != owner:
+            raise RuntimeError(
+                f"{what} would interleave with the exclusive driver "
+                f"{self.owner!r} that owns this engine's step loop; consume "
+                f"tokens through that driver's handles instead (e.g. the "
+                f"async engine's AsyncRequestHandle)")
 
 
 class RequestHandle:
@@ -83,7 +129,9 @@ class RequestHandle:
 
     def stream(self) -> Iterator[RequestOutput]:
         """Yield output events until the request finishes, stepping the
-        engine whenever no event is buffered."""
+        engine whenever no event is buffered. Raises RuntimeError if an
+        exclusive driver (serving.async_engine) owns the engine's step loop
+        — pumping here would interleave two drivers (DriverClaim)."""
         while True:
             while self._buf:
                 yield self._buf.popleft()

@@ -23,6 +23,7 @@ per-replica and aggregated (metrics.merge_reports).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence
 
 from repro.configs.base import (HardwareProfile, ModelConfig, ServingConfig,
@@ -30,7 +31,7 @@ from repro.configs.base import (HardwareProfile, ModelConfig, ServingConfig,
 from repro.core.types import Request, SamplingParams
 from repro.serving.core import EngineCore, EngineStats, IterationOutcome
 from repro.serving.metrics import SLOReport, evaluate, merge_reports
-from repro.serving.outputs import RequestHandle
+from repro.serving.outputs import DriverClaim, RequestHandle
 
 
 # --------------------------------------------------------------------- policy
@@ -162,6 +163,7 @@ class Router:
         self.policy = make_policy(policy)
         self._owner: Dict[int, int] = {}   # req_id -> replica index
         self._next_req_id = 0              # cluster-unique ids (handle path)
+        self.driver_claim = DriverClaim()  # exclusive-driver ownership
 
     # ------------------------------------------------------------- online API
     def add_request(self, prompt_len=None, *,
@@ -217,6 +219,7 @@ class Router:
         return self.replicas[idx].abort(req_id)
 
     def _pump(self) -> bool:
+        self.driver_claim.require("RequestHandle pump (stream()/result())")
         return self.step() is not None
 
     def step(self) -> Optional[IterationOutcome]:
@@ -246,11 +249,35 @@ class Router:
         return max(c.clock for c in self.replicas)
 
     def drain(self, max_time_s: float = 1e9) -> None:
+        self.driver_claim.require("drain()")
         for core in self.replicas:
             core.drain(max_time_s)
         # this path bypasses Router.step's per-finish pruning
         self._owner = {rid: idx for rid, idx in self._owner.items()
                        if self.replicas[idx].is_live(rid)}
+
+    def drain_wallclock(self, timeout_s: float, *, owner=None, on_step=None,
+                        now=None) -> List[int]:
+        """Wall-clock-bounded cluster drain (graceful shutdown); steps the
+        lagging replica until idle or ``timeout_s`` host seconds elapse.
+        Returns unfinished req_ids across all replicas (see
+        EngineCore.drain_wallclock)."""
+        now = now or time.monotonic
+        self.driver_claim.require("drain_wallclock()", owner=owner)
+        deadline = now() + timeout_s
+        while self.has_work and now() < deadline:
+            out = self.step()
+            if out is None:
+                break
+            if on_step is not None:
+                on_step(out)
+        self._owner = {rid: idx for rid, idx in self._owner.items()
+                       if self.replicas[idx].is_live(rid)}
+        return self.live_request_ids()
+
+    def live_request_ids(self) -> List[int]:
+        return sorted(rid for c in self.replicas
+                      for rid in c.live_request_ids())
 
     def run(self, requests: Sequence[Request], *,
             max_time_s: float = 1e9) -> SLOReport:
