@@ -24,6 +24,7 @@ MODULES = [
     ("router", "benchmarks.bench_router_scaling"),
     ("prefix_cache", "benchmarks.bench_prefix_cache"),
     ("paged_decode", "benchmarks.bench_paged_decode"),
+    ("tp_decode", "benchmarks.bench_tp_decode"),
     ("disagg", "benchmarks.bench_disagg"),
     ("pipeline", "benchmarks.bench_pipeline"),
     ("server", "benchmarks.bench_server"),

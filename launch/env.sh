@@ -1,0 +1,30 @@
+# Host-tuning environment for local runs and CI — source, don't execute:
+#
+#     source launch/env.sh            # 1 XLA host device (default)
+#     SUPERINFER_HOST_DEVICES=4 source launch/env.sh   # tensor-parallel runs
+#
+# Python-side counterpart: repro.launch.hostenv.ensure_host_devices merges
+# the same --xla_force_host_platform_device_count flag when jax has not
+# been imported yet; this file is for the cases where it already has (or
+# where the process tree must inherit the flag, e.g. pytest workers).
+
+# tcmalloc: faster malloc for the block-pool churn; skip when absent
+if [ -z "${LD_PRELOAD:-}" ] && [ -e /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 ]; then
+    export LD_PRELOAD=/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4
+fi
+# silence large-numpy-allocation warnings (the host KV tier is one of those)
+export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=${TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD:-60000000000}
+# keep TF/XLA C++ logging out of benchmark CSV output
+export TF_CPP_MIN_LOG_LEVEL=${TF_CPP_MIN_LOG_LEVEL:-4}
+
+# N host XLA devices for tensor parallelism on CPU (tests/CI use 4).
+# Must be in the environment before the FIRST jax import anywhere in the
+# process — hence a sourced file, not a Python default.
+if [ -n "${SUPERINFER_HOST_DEVICES:-}" ] && [ "${SUPERINFER_HOST_DEVICES}" -gt 1 ]; then
+    case "${XLA_FLAGS:-}" in
+        *xla_force_host_platform_device_count*) ;;
+        *) export XLA_FLAGS="${XLA_FLAGS:+${XLA_FLAGS} }--xla_force_host_platform_device_count=${SUPERINFER_HOST_DEVICES}" ;;
+    esac
+fi
+
+export PYTHONPATH="${PYTHONPATH:+${PYTHONPATH}:}src"

@@ -392,6 +392,15 @@ class ServingConfig:
     # the executor stays the pure timing model and replay is bit-identical.
     # See DESIGN.md §Execution layer.
     paged_runner: bool = False
+    # Tensor-parallel degree of ONE logical replica: the KV pool shards its
+    # kv-head dim over a ("model",) mesh of tp devices, weights follow
+    # DECODE_RULES, and transfer accounting turns per-shard (each Superchip
+    # moves 1/tp of every row, concurrently). tp=1 (default) is the
+    # single-chip path, bit-identical to the golden replay. GQA requires
+    # num_kv_heads % tp == 0 (or tp > num_kv_heads for the validated
+    # replicated-attention fallback). See DESIGN.md §Tensor-parallel
+    # execution.
+    tp: int = 1
 
 
 # ---------------------------------------------------------------------------

@@ -114,10 +114,24 @@ class DuplexKV:
                                        serving.num_dram_blocks,
                                        bb, layout_segs,
                                        prefix_cache=serving.prefix_cache)
+        # Tensor parallelism: the KV pool's kv-head dim shards over tp
+        # Superchips, so each shard's C2C link moves 1/kv_shards of every
+        # row, concurrently. tp == 1 skips the plan entirely (bit-identical
+        # golden path); replicate-fallback plans (tp > num_kv_heads) keep
+        # kv_shards == 1 — every chip moves full rows.
+        tp = int(getattr(serving, "tp", 1) or 1)
+        if tp > 1:
+            from repro.distributed.tp import plan_tp_sharding
+            self.kv_shards = plan_tp_sharding(cfg, tp).kv_shards
+        else:
+            self.kv_shards = 1
         self.engine = engine_for_flags(
             hw, block_first=serving.block_first_layout,
             batched_kernel=serving.batched_transfer_kernel,
-            duplex=serving.duplex)
+            duplex=serving.duplex, shards=self.kv_shards)
+        # cumulative transfer-byte accounting (global and per-shard)
+        self.d2h_bytes_total = 0
+        self.h2d_bytes_total = 0
         self.eager = serving.eager_rotation and serving.duplex
         # Cross-iteration pipeline: eager D2H issued during iteration N keeps
         # its in-flight flags set while N's kernels execute (the copies
@@ -178,6 +192,16 @@ class DuplexKV:
                     demoted_blocks=t.demoted_blocks,
                     evicted_blocks=t.evicted_blocks,
                     cached_blocks=t.cached_blocks)
+
+    def transfer_counters(self) -> Dict[str, int]:
+        """Cumulative link-traffic counters (per replica). Global bytes are
+        what the pool logically moved; per-shard bytes are what ONE chip's
+        C2C link actually carried (== global / kv_shards)."""
+        return dict(kv_shards=self.kv_shards,
+                    d2h_bytes=self.d2h_bytes_total,
+                    h2d_bytes=self.h2d_bytes_total,
+                    d2h_bytes_per_shard=self.d2h_bytes_total // self.kv_shards,
+                    h2d_bytes_per_shard=self.h2d_bytes_total // self.kv_shards)
 
     # -- scheduler residency view --------------------------------------------------
     def scheduler_view(self, requests) -> KVView:
@@ -253,6 +277,7 @@ class DuplexKV:
         descs = self.table.migrate_out(req_id)
         stats = (self.engine.execute(descs, []) if descs
                  else TransferStats())
+        self.d2h_bytes_total += stats.d2h_bytes
         if self.data is not None and descs:
             self.data.run_d2h(descs)
         self.table.complete_migrate_out(req_id)
@@ -349,6 +374,8 @@ class DuplexKV:
         if self.data is not None and h2d:
             self.data.run_h2d(h2d)
         stats = self.engine.execute(d2h, h2d)
+        self.d2h_bytes_total += stats.d2h_bytes
+        self.h2d_bytes_total += stats.h2d_bytes
 
         eager_stats = None
         if self.eager:
@@ -362,6 +389,7 @@ class DuplexKV:
                     exclude_slots=exclude_slots)
                 if descs:
                     eager_stats = self.engine.execute(descs, [])
+                    self.d2h_bytes_total += eager_stats.d2h_bytes
                     if self.data is not None:
                         self.data.run_d2h(descs)
                     if self.pipelined:

@@ -34,58 +34,80 @@ class TransferStats:
     h2d_time: float = 0.0
     e2e_time: float = 0.0
     launches: int = 0
+    # tensor-parallel accounting: the pool's kv-head dim is sharded over
+    # ``shards`` Superchips, so each shard moves 1/shards of every row over
+    # ITS OWN C2C link, concurrently — byte totals above stay GLOBAL, the
+    # per-shard fields are what one link actually carried. shards == 1
+    # (the default) keeps every field bit-identical to the single-chip path.
+    shards: int = 1
+    d2h_bytes_per_shard: int = 0
+    h2d_bytes_per_shard: int = 0
 
 
 class TransferEngine:
-    def __init__(self, link: LinkProfile, mode: str = "duplex"):
+    def __init__(self, link: LinkProfile, mode: str = "duplex",
+                 shards: int = 1):
         assert mode in MODES, mode
+        assert shards >= 1, shards
         self.link = link
         self.mode = mode
+        # KV-pool shards moving concurrently: each shard's link carries
+        # nbytes/shards of every descriptor (C2C bandwidth is per-Superchip)
+        self.shards = int(shards)
 
     # -- per-direction time ----------------------------------------------------
     def _direction_time(self, descs: Sequence[TransferDesc]) -> Tuple[float, int, int]:
-        """Returns (seconds, launches, bytes) for one direction."""
+        """Returns (seconds, launches, GLOBAL bytes) for one direction.
+        With ``shards > 1`` the time is what ONE shard's link takes for its
+        1/shards slice (all shards stream concurrently); launch counts are
+        per shard (each shard issues its own batched launch)."""
         if not descs:
             return 0.0, 0, 0
+        s = self.shards
         total = sum(d.nbytes for d in descs)
         if self.mode == "naive":
             # layer-first: every (layer, block) segment is its own launch
             t = 0.0
             n = 0
             for d in descs:
-                seg = d.nbytes // max(d.segments, 1)
+                seg = d.nbytes // max(d.segments, 1) // s
                 t += d.segments * (seg / self.link.effective_bw(seg))
                 n += d.segments
             return t, n, total
         if self.mode == "ms":
             # block-first merged segment, one launch per block
-            t = sum(d.nbytes / self.link.effective_bw(d.nbytes) for d in descs)
+            t = sum((d.nbytes // s) / self.link.effective_bw(d.nbytes // s)
+                    for d in descs)
             return t, len(descs), total
         # ms_mk / duplex: single batched launch per direction, streams at the
         # large-transfer rate
-        stream_bw = self.link.effective_bw(max(total, descs[0].nbytes))
-        t = self.link.launch_us * 1e-6 + total / stream_bw
+        stream_bw = self.link.effective_bw(max(total, descs[0].nbytes) // s)
+        t = self.link.launch_us * 1e-6 + (total / s) / stream_bw
         return t, 1, total
 
     # -- both directions ---------------------------------------------------------
     def execute(self, d2h: Sequence[TransferDesc],
                 h2d: Sequence[TransferDesc]) -> TransferStats:
+        s = self.shards
         t_d2h, n1, b1 = self._direction_time(d2h)
         t_h2d, n2, b2 = self._direction_time(h2d)
         if self.mode == "duplex":
             # concurrent directions, jointly capped by host-DRAM bandwidth
+            # (per Superchip — each shard has its own Grace DRAM)
             cap = self.link.duplex_total_bw / 2
-            t_d2h = max(t_d2h, b1 / cap if b1 else 0.0)
-            t_h2d = max(t_h2d, b2 / cap if b2 else 0.0)
+            t_d2h = max(t_d2h, b1 / s / cap if b1 else 0.0)
+            t_h2d = max(t_h2d, b2 / s / cap if b2 else 0.0)
             e2e = max(t_d2h, t_h2d)
         else:
             # data race on shared HBM slots serializes the directions
             e2e = t_d2h + t_h2d
         return TransferStats(d2h_bytes=b1, h2d_bytes=b2, d2h_time=t_d2h,
-                             h2d_time=t_h2d, e2e_time=e2e, launches=n1 + n2)
+                             h2d_time=t_h2d, e2e_time=e2e, launches=n1 + n2,
+                             shards=s, d2h_bytes_per_shard=b1 // s,
+                             h2d_bytes_per_shard=b2 // s)
 
     def ideal_duplex_time(self, d2h_bytes: int, h2d_bytes: int) -> float:
-        cap = self.link.dram_total_bw / 2
+        cap = (self.link.dram_total_bw / 2) * self.shards
         return max(d2h_bytes / cap if d2h_bytes else 0.0,
                    h2d_bytes / cap if h2d_bytes else 0.0)
 
@@ -95,8 +117,8 @@ class TransferEngine:
         t, _, _ = self._direction_time([d] * 64)
         per_block = t / 64
         if self.mode == "duplex":
-            per_block = max(per_block,
-                            block_bytes / (self.link.duplex_total_bw / 2))
+            per_block = max(per_block, (block_bytes / self.shards)
+                            / (self.link.duplex_total_bw / 2))
         return 1.0 / per_block if per_block > 0 else float("inf")
 
 
@@ -171,8 +193,11 @@ class PipelineTimeline:
 
 
 def engine_for_flags(hw: HardwareProfile, *, block_first: bool,
-                     batched_kernel: bool, duplex: bool) -> TransferEngine:
-    """Map ServingConfig feature flags onto a Table-1 mode."""
+                     batched_kernel: bool, duplex: bool,
+                     shards: int = 1) -> TransferEngine:
+    """Map ServingConfig feature flags onto a Table-1 mode. ``shards`` is
+    the KV-pool tensor-parallel degree (1 = single-chip, bit-identical to
+    the pre-TP engine)."""
     if not block_first:
         mode = "naive"
     elif not batched_kernel:
@@ -181,4 +206,4 @@ def engine_for_flags(hw: HardwareProfile, *, block_first: bool,
         mode = "ms_mk"
     else:
         mode = "duplex"
-    return TransferEngine(hw.link, mode)
+    return TransferEngine(hw.link, mode, shards=shards)

@@ -5,9 +5,13 @@ jit boundary silently dropped pool donation, every launch would deep-copy
 the whole KV pool (tens of GiB at production scale) and the "async
 dispatch" would be async copies of the cache, not async compute. This tool
 lowers each jitted entry point of ``PagedModelRunner``/``PagedKVStore``
-with a tiny reduced config and asserts the donation marker
-(``tf.aliasing_output`` on the pool parameter of the StableHLO ``main``)
-is present — the same check a human would do with ``.lower().as_text()``.
+with a tiny reduced config and asserts the donation marker on the pool
+parameter of the StableHLO ``main`` is present — the same check a human
+would do with ``.lower().as_text()``. Unsharded lowerings mark donation as
+``tf.aliasing_output``; sharded (tensor-parallel shard_map) lowerings mark
+it as ``jax.buffer_donor`` — both count. With >= 2 XLA devices (the tool
+forces the host device count when it still can) every boundary is audited
+a second time at tp=2 over the sharded pool.
 
 The CPU backend *ignores* donation at execution time, so compiled-HLO copy
 counts are reported for information only, never asserted: the lowering
@@ -26,7 +30,7 @@ import sys
 
 _ALIAS_RE = re.compile(
     r"%arg\d+: tensor<([0-9x]+)x[a-z0-9]+>\s*"
-    r"(\{[^}]*tf\.aliasing_output[^}]*\})?")
+    r"(\{[^}]*(?:tf\.aliasing_output|jax\.buffer_donor)[^}]*\})?")
 
 
 def _pool_alias(lowered_text: str, pool_shape) -> tuple:
@@ -59,6 +63,14 @@ def main(argv=None) -> int:
                     help="dump the main-func signature of each lowering")
     args = ap.parse_args(argv)
 
+    # the sharded (tp=2) boundaries need 2 XLA devices; force the host
+    # device count while the flag can still act (before any jax import)
+    try:
+        from repro.launch.hostenv import ensure_host_devices
+        ensure_host_devices(2)
+    except RuntimeError:
+        pass                         # jax already up with 1 device
+
     import jax
     import jax.numpy as jnp
     from repro.configs import GH200, ServingConfig, get_config
@@ -69,7 +81,6 @@ def main(argv=None) -> int:
     sv = ServingConfig(num_hbm_blocks=8, num_dram_blocks=32,
                        scheduler="rotasched", block_size=4, max_model_len=64,
                        prefill_chunk=8, paged_runner=True, pipeline=True)
-    runner = PagedModelRunner(cfg, sv, GH200, seed=0)
 
     class _KV:                       # bind() only needs the attach hook
         table = None
@@ -77,27 +88,43 @@ def main(argv=None) -> int:
         def attach_data_backend(self, store):
             pass
 
-    runner.bind(_KV())
-    store = runner.store
-    pool = store.pool
-    ps = pool.shape
+    def runner_cases(tp):
+        """The four pool-carrying jit boundaries of one runner."""
+        runner = PagedModelRunner(
+            cfg, dataclasses.replace(sv, tp=tp), GH200, seed=0)
+        runner.bind(_KV())
+        store = runner.store
+        pool = store.pool
+        two = jnp.zeros(2, jnp.int32)
+        rows = jnp.zeros((2,) + store.row_shape, pool.dtype)
+        bt = jnp.zeros((2, 2), jnp.int32)
+        ids = jnp.zeros(8, jnp.int32)
+        zero = jnp.asarray(0, jnp.int32)
+        tag = f" [tp={tp}]" if tp > 1 else ""
+        return runner, [
+            # (name, jitted fn, args, expect_donated)
+            (f"PagedKVStore._jit_copy{tag}", store._jit_copy,
+             (pool, two, two), True),
+            (f"PagedKVStore._jit_upload{tag}", store._jit_upload,
+             (pool, rows, zero), True),
+            (f"PagedModelRunner._jit_decode{tag}", runner._jit_decode,
+             (runner._layers, runner._head, pool, two, bt, two), True),
+            (f"PagedModelRunner._jit_prefill{tag}", runner._jit_prefill,
+             (runner._layers, runner._head, pool, ids, zero,
+              jnp.asarray(8, jnp.int32), two), True),
+        ]
 
+    runner, cases = runner_cases(1)
+    pool = runner.store.pool
+    ps = pool.shape
     two = jnp.zeros(2, jnp.int32)
-    rows = jnp.zeros((2,) + store.row_shape, pool.dtype)
-    bt = jnp.zeros((2, 2), jnp.int32)
-    ids = jnp.zeros(8, jnp.int32)
-    zero = jnp.asarray(0, jnp.int32)
-    cases = [
-        # (name, jitted fn, args, expect_donated)
-        ("PagedKVStore._jit_copy", store._jit_copy, (pool, two, two), True),
-        ("PagedKVStore._jit_upload", store._jit_upload,
-         (pool, rows, zero), True),
-        ("PagedModelRunner._jit_decode", runner._jit_decode,
-         (runner._layers, runner._head, pool, two, bt, two), True),
-        ("PagedModelRunner._jit_prefill", runner._jit_prefill,
-         (runner._layers, runner._head, pool, ids, zero,
-          jnp.asarray(8, jnp.int32), two), True),
-    ]
+    if jax.device_count() >= 2:
+        # the sharded boundaries: same global pool shape in the signature,
+        # donation recorded as jax.buffer_donor
+        cases += runner_cases(2)[1]
+    else:
+        print("# note: 1 XLA device — tp=2 sharded boundaries not audited "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=2)")
     # the bare kernel jitted WITHOUT donate_argnums: its internal
     # input_output_aliases cannot reach the boundary alone — a regression
     # guard that the audit detects missing donation (negative control)

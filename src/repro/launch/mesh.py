@@ -16,3 +16,20 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh (elastic scaling / tests)."""
     return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_tp_mesh(tp: int):
+    """1-D ``("model",)`` mesh of ``tp`` devices: one logical serving
+    replica spanning ``tp`` chips (the paged runner's tensor-parallel
+    layout). On a CPU host, force the device count BEFORE importing jax:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (see
+    ``launch.hostenv.ensure_host_devices`` / launch/env.sh)."""
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if jax.device_count() < tp:
+        raise RuntimeError(
+            f"tp={tp} needs {tp} devices but jax sees "
+            f"{jax.device_count()}; on a CPU host set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={tp} before the first "
+            f"jax import (launch.hostenv.ensure_host_devices does this)")
+    return jax.make_mesh((tp,), ("model",))

@@ -38,6 +38,16 @@ import json
 
 
 def main(argv=None):
+    # --tp must act before ANYTHING imports jax: a CPU host exposes one XLA
+    # device unless --xla_force_host_platform_device_count is set at import
+    # time (launch.hostenv merges it into XLA_FLAGS when still possible)
+    pre = argparse.ArgumentParser(add_help=False)
+    pre.add_argument("--tp", type=int, default=1)
+    pre_args, _ = pre.parse_known_args(argv)
+    if pre_args.tp > 1:
+        from repro.launch.hostenv import ensure_host_devices
+        ensure_host_devices(pre_args.tp)
+
     from repro.serving.router import ROUTER_POLICIES
 
     ap = argparse.ArgumentParser()
@@ -110,6 +120,13 @@ def main(argv=None):
                          "The trace is clamped to smoke scale (short "
                          "prompts/outputs, reduced vocab) so interpret-mode "
                          "kernels stay fast on CPU.")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor parallelism: shard the paged runner's KV "
+                         "pool, Pallas kernels, and weights over a "
+                         "('model',) mesh of TP devices. On a CPU host the "
+                         "launcher forces the XLA host device count (must "
+                         "act before the first jax import); tp=1 (default) "
+                         "is the bit-identical single-chip path")
     ap.add_argument("--paged-max-prompt", type=int, default=40,
                     help="prompt-length clamp under --paged-runner")
     ap.add_argument("--paged-max-output", type=int, default=8,
@@ -159,7 +176,7 @@ def main(argv=None):
         pipeline_overlap=not args.no_pipeline,
         pipeline=args.pipeline,
         prefix_cache=(args.prefix_cache == "on"),
-        paged_runner=args.paged_runner)
+        paged_runner=args.paged_runner, tp=args.tp)
     hw = HW_PROFILES[args.hw]
     arrival_kw = (dict(burst_on=args.burst_on, burst_off=args.burst_off,
                        burst_factor=args.burst_factor)
@@ -240,15 +257,32 @@ def main(argv=None):
                prefix_cache=args.prefix_cache,
                prefill_tokens_executed=stats.prefill_tokens,
                pipeline=args.pipeline)
+    if args.disagg:
+        cores = cluster.replicas
+    elif args.replicas > 1:
+        cores = router.replicas
+    else:
+        cores = [eng.core]
+    if args.tp > 1:
+        # per-shard link accounting: what ONE chip's C2C actually carried
+        tc = [c.kv.transfer_counters() for c in cores]
+        row.update(tp=args.tp, kv_shards=tc[0]["kv_shards"],
+                   d2h_bytes=sum(t["d2h_bytes"] for t in tc),
+                   h2d_bytes=sum(t["h2d_bytes"] for t in tc),
+                   d2h_bytes_per_shard=sum(t["d2h_bytes_per_shard"]
+                                           for t in tc),
+                   h2d_bytes_per_shard=sum(t["h2d_bytes_per_shard"]
+                                           for t in tc))
     if args.paged_runner:
         # per-replica executors: sum counters cluster-wide (replicas == 1
         # degenerates to the single engine's executor)
-        if args.disagg:
-            execs = [rep_core.executor for rep_core in cluster.replicas]
-        elif args.replicas > 1:
-            execs = [rep_core.executor for rep_core in router.replicas]
-        else:
-            execs = [eng.core.executor]
+        execs = [c.executor for c in cores]
+        if args.tp > 1:
+            row.update(
+                pool_shard_bytes=sum(e.store.pool_shard_bytes
+                                     for e in execs),
+                pool_global_bytes=sum(e.store.pool_global_bytes
+                                      for e in execs))
         row.update(
             paged_runner=True,
             decode_batches=sum(e.decode_batches for e in execs),

@@ -245,9 +245,10 @@ class EngineCore:
         #      ``reduced()`` — while timing stays on ``cfg``);
         #    * default: pure SimExecutor (tokens are oracle counts).
         self.real = real_executor
+        tp = int(getattr(serving, "tp", 1) or 1)
         if real_executor is not None:
             self.executor: Executor = RealExecutorAdapter(
-                real_executor, executor or SimExecutor(cfg, hw))
+                real_executor, executor or SimExecutor(cfg, hw, tp=tp))
         elif executor is not None:
             self.executor = executor
         elif serving.paged_runner:
@@ -256,7 +257,7 @@ class EngineCore:
                 runner_cfg or cfg, serving, hw, seed=runner_seed,
                 timing_cfg=cfg)
         else:
-            self.executor = SimExecutor(cfg, hw)
+            self.executor = SimExecutor(cfg, hw, tp=tp)
         self.kv = DuplexKV(cfg, serving, hw)
         if hasattr(self.executor, "bind"):
             self.executor.bind(self.kv)   # pool-backed executors attach here

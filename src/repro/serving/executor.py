@@ -125,10 +125,15 @@ class Executor:
 
 class SimExecutor(Executor):
     def __init__(self, cfg: ModelConfig, hw: HardwareProfile,
-                 fixed_overhead_s: float = 0.004):
+                 fixed_overhead_s: float = 0.004, tp: int = 1):
         self.cfg = cfg
         self.hw = hw
         self.fixed = fixed_overhead_s
+        # tensor parallelism: tp chips each hold 1/tp of the weights and KV
+        # and contribute their full FLOP/bandwidth budgets — the roofline
+        # scales both denominators by tp (the psum latency hides inside
+        # fixed_overhead_s). tp == 1 is arithmetically unchanged.
+        self.tp = max(int(tp), 1)
         self.n_active = cfg.active_param_count()
         self.weight_bytes = cfg.param_count() * 2
         self.kv_per_token = cfg.kv_bytes_per_token()
@@ -143,10 +148,10 @@ class SimExecutor(Executor):
         flops += 4 * plan.decode_kv_tokens * hqd * self.cfg.num_attn_layers \
             / max(self.cfg.num_layers, 1) * self.cfg.num_layers
         flops += 2 * plan.prefill_attn_tokens * hqd * self.cfg.num_attn_layers
-        t_compute = flops / (self.hw.flops_bf16 * self.hw.mfu)
+        t_compute = flops / (self.hw.flops_bf16 * self.hw.mfu * self.tp)
         # memory: weights once per iteration + decode KV reads
-        t_mem = (self.weight_bytes
-                 + plan.decode_kv_tokens * self.kv_per_token) / self.hw.hbm_bw
+        t_mem = (self.weight_bytes + plan.decode_kv_tokens
+                 * self.kv_per_token) / (self.hw.hbm_bw * self.tp)
         return max(t_compute, t_mem) + self.fixed
 
     def plan_time(self, plan: BatchPlan) -> float:

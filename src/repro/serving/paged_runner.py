@@ -22,6 +22,14 @@ same integers the scheduler budgets with. Consequences:
   cache-hit block is a genuinely shared pool row — a new request's block
   table simply points at it, and attention reads the KV another request
   prefilled (RoPE is position-absolute, so shared prefixes agree).
+* **Tensor parallelism** (``ServingConfig.tp > 1``): the pool's KV-HEAD
+  dim shards over a 1-D ``("model",)`` mesh — per-shard row shape
+  ``(L, 2, P, Hkv/TP, D)`` — while the row dim (the block table's slot
+  ids) stays GLOBAL, so DuplexKV / RotaSched / prefix-cache logic is
+  untouched. Weights shard per ``distributed.tp.layer_pspecs``; decode
+  stays one (shard_map'd) launch per layer per iteration, with a psum
+  after the wo and w_down contractions. ``tp == 1`` takes none of these
+  branches and stays bit-identical to the single-chip runner.
 
 Pallas kernels run in interpret mode under ``jax.jit`` on CPU (tier-1 CI);
 on a real TPU the same calls lower to Mosaic. See DESIGN.md §Execution
@@ -62,7 +70,7 @@ class PagedKVStore:
 
     def __init__(self, cfg: ModelConfig, serving: ServingConfig, dtype,
                  *, staging: int = 64, interpret: bool = True,
-                 double_buffer: bool = False):
+                 double_buffer: bool = False, tp_plan=None, mesh=None):
         import jax
         import jax.numpy as jnp
         if staging < 1 or staging & (staging - 1):
@@ -98,7 +106,23 @@ class PagedKVStore:
             self.h2d_chunk = staging
             self.d2h_chunk = staging
         self.row_shape = (L, 2, P, cfg.num_kv_heads, cfg.head_dim)
-        self.pool = jnp.zeros((self.nb + staging + 1,) + self.row_shape, dtype)
+        pool_shape = (self.nb + staging + 1,) + self.row_shape
+        # Tensor parallelism: the kv-head dim shards over the ("model",)
+        # mesh — pool rows keep their GLOBAL slot numbering (the row dim is
+        # never sharded), so the block table and every transfer descriptor
+        # stay tp-agnostic. mesh is None on the single-chip path, which
+        # stays bit-identical (plain single-device pool, unwrapped jits).
+        self.tp_plan = tp_plan
+        self.mesh = mesh
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            from repro.distributed.tp import pool_pspec
+            self._pool_spec = pool_pspec(tp_plan)
+            sharding = NamedSharding(mesh, self._pool_spec)
+            self.pool = jnp.zeros(pool_shape, dtype, device=sharding)
+        else:
+            self._pool_spec = None
+            self.pool = jnp.zeros(pool_shape, dtype)
         self.host: Dict[int, np.ndarray] = {}      # dram_slot -> row array
         self.interpret = interpret
         # counters (benchmarks / tests)
@@ -110,6 +134,9 @@ class PagedKVStore:
         from repro.kernels.kv_copy import kv_copy_tpu
 
         def _copy(pool, src, dst):
+            # reshape happens INSIDE shard_map (on the local block) in tp
+            # mode — flattening the sharded array outside would force an
+            # all-gather and destroy the sharding
             flat = pool.reshape(pool.shape[0], -1)
             out = kv_copy_tpu(flat, src, dst, interpret=interpret)
             return out.reshape(pool.shape)
@@ -119,12 +146,37 @@ class PagedKVStore:
             return jax.lax.dynamic_update_slice(pool, rows.astype(pool.dtype),
                                                 idx)
 
+        if mesh is not None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as Pspec
+            ps = self._pool_spec
+            # check_rep=False: pallas calls inside shard_map can't prove
+            # replication; correctness is covered by the tp parity tests
+            _copy = shard_map(_copy, mesh=mesh,
+                              in_specs=(ps, Pspec(), Pspec()),
+                              out_specs=ps, check_rep=False)
+            _upload = shard_map(_upload, mesh=mesh,
+                                in_specs=(ps, ps, Pspec()),
+                                out_specs=ps, check_rep=False)
+
         # donate the pool: the caller always rebinds to the returned array,
         # and without donation every launch would deep-copy the whole pool,
         # defeating kv_copy_tpu's input_output_aliases (backends that cannot
-        # donate just ignore the hint)
+        # donate just ignore the hint; sharded lowerings record it as
+        # jax.buffer_donor instead of tf.aliasing_output — see
+        # launch/audit_donation.py)
         self._jit_copy = jax.jit(_copy, donate_argnums=(0,))
         self._jit_upload = jax.jit(_upload, donate_argnums=(0,))
+
+    @property
+    def pool_shard_bytes(self) -> int:
+        """Bytes ONE device holds: global/kv_shards when the kv-head dim is
+        sharded, the full pool when replicated or single-chip."""
+        return self.pool.addressable_shards[0].data.nbytes
+
+    @property
+    def pool_global_bytes(self) -> int:
+        return self.pool.nbytes
 
     def _copy_rows(self, src: Sequence[int], dst: Sequence[int]) -> None:
         """One batched row-copy launch: pool[dst[i]] = pool[src[i]].
@@ -243,7 +295,11 @@ class PagedModelRunner(Executor):
 
         self.cfg = model_cfg
         self.serving = serving
-        self.sim = sim or SimExecutor(timing_cfg or model_cfg, hw)
+        self.tp = int(getattr(serving, "tp", 1) or 1)
+        from repro.distributed.tp import plan_tp_sharding
+        self.tp_plan = plan_tp_sharding(model_cfg, self.tp)
+        self.sim = sim or SimExecutor(timing_cfg or model_cfg, hw,
+                                      tp=self.tp)
         self.interpret = interpret
         self.dtype = dtype_of(model_cfg.dtype)
         self.lm = LM(model_cfg)
@@ -255,9 +311,50 @@ class PagedModelRunner(Executor):
             self._head["lm_head"] = self.params["lm_head"]
         self.store: Optional[PagedKVStore] = None
         self.kv = None
-        # pool (arg 2 after layers/head) is donated: rebound on every return
-        self._jit_decode = jax.jit(self._decode_impl, donate_argnums=(2,))
-        self._jit_prefill = jax.jit(self._prefill_impl, donate_argnums=(2,))
+        # psum flags are trace-time constants: at tp == 1 neither branch is
+        # taken, so the jaxpr — and the golden replay — is bit-identical to
+        # the single-chip runner
+        self._psum_attn = self.tp_plan.shard_kv
+        self._psum_mlp = self.tp_plan.shard_mlp
+        if self.tp_plan.trivial:
+            self.mesh = None
+            # pool (arg 2 after layers/head) donated: rebound on every return
+            self._jit_decode = jax.jit(self._decode_impl, donate_argnums=(2,))
+            self._jit_prefill = jax.jit(self._prefill_impl,
+                                        donate_argnums=(2,))
+        else:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as Pspec
+            from repro.distributed.tp import (head_pspecs, layer_pspecs,
+                                              pool_pspec)
+            from repro.launch.mesh import make_tp_mesh
+            self.mesh = make_tp_mesh(self.tp)   # raises with the XLA_FLAGS
+            #                                     recipe if devices are short
+            lp = layer_pspecs(self.tp_plan)
+            layer_specs = [{k: lp[k] for k in layer} for layer in self._layers]
+            head_specs = head_pspecs(self._head)
+            # shard the weights once, up front (device_put per spec); jit
+            # then consumes them already laid out — no per-step resharding
+            self._layers = [
+                {k: jax.device_put(v, NamedSharding(self.mesh, lp[k]))
+                 for k, v in layer.items()} for layer in self._layers]
+            self._head = {
+                k: jax.device_put(v, NamedSharding(self.mesh, head_specs[k]))
+                for k, v in self._head.items()}
+            ps = pool_pspec(self.tp_plan)
+            dec = shard_map(
+                self._decode_impl, mesh=self.mesh,
+                in_specs=(layer_specs, head_specs, ps,
+                          Pspec(), Pspec(), Pspec()),
+                out_specs=(ps, Pspec()), check_rep=False)
+            pre = shard_map(
+                self._prefill_impl, mesh=self.mesh,
+                in_specs=(layer_specs, head_specs, ps,
+                          Pspec(), Pspec(), Pspec(), Pspec()),
+                out_specs=(ps, Pspec()), check_rep=False)
+            self._jit_decode = jax.jit(dec, donate_argnums=(2,))
+            self._jit_prefill = jax.jit(pre, donate_argnums=(2,))
         # counters (benchmarks / tests): decode launch count is per-layer,
         # INDEPENDENT of batch size — the whole point of the batched path
         self.decode_batches = 0
@@ -272,7 +369,9 @@ class PagedModelRunner(Executor):
         self.kv = kv
         self.store = PagedKVStore(
             self.cfg, self.serving, self.dtype, interpret=self.interpret,
-            double_buffer=bool(getattr(self.serving, "pipeline", False)))
+            double_buffer=bool(getattr(self.serving, "pipeline", False)),
+            tp_plan=None if self.tp_plan.trivial else self.tp_plan,
+            mesh=self.mesh)
         kv.attach_data_backend(self.store)
 
     def _flatten_layers(self) -> List[dict]:
@@ -457,6 +556,7 @@ class PagedModelRunner(Executor):
         rows (trash row on padded lanes/slots). Per layer: scatter the new
         token's K/V into the tail block row, then one paged-attention
         launch over the whole batch."""
+        import jax
         import jax.numpy as jnp
         from repro.kernels.paged_attention import paged_attention_tpu
         from repro.models.common import apply_rope, rms_norm, swiglu
@@ -483,9 +583,15 @@ class PagedModelRunner(Executor):
                 v[:, 0].astype(pool.dtype))
             out = paged_attention_tpu(q[:, 0], pool, bt, cl + 1, layer=li,
                                       interpret=self.interpret)
-            x = x + jnp.einsum("bhk,hkd->bd", out, p["wo"])
+            attn = jnp.einsum("bhk,hkd->bd", out, p["wo"])
+            if self._psum_attn:   # partial over this shard's kv-head groups
+                attn = jax.lax.psum(attn, "model")
+            x = x + attn
             h2 = rms_norm(x[:, None], p["ln2"], cfg.rms_eps)
-            x = x + swiglu(h2, p["w_gate"], p["w_up"], p["w_down"])[:, 0]
+            mlp = swiglu(h2, p["w_gate"], p["w_up"], p["w_down"])[:, 0]
+            if self._psum_mlp:    # partial over this shard's d_ff slice
+                mlp = jax.lax.psum(mlp, "model")
+            x = x + mlp
         logits = self._logits(head, x)
         return pool, jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
@@ -525,15 +631,22 @@ class PagedModelRunner(Executor):
                 k[0].astype(pool.dtype))
             pool = pool.at[wrow, lrow, ones, woff].set(
                 v[0].astype(pool.dtype))
-            k_ctx = pool[bt, li, 0].reshape(1, MB * P, cfg.num_kv_heads,
-                                            cfg.head_dim).astype(k.dtype)
-            v_ctx = pool[bt, li, 1].reshape(1, MB * P, cfg.num_kv_heads,
-                                            cfg.head_dim).astype(v.dtype)
+            # local kv-head count comes from the pool's (possibly sharded)
+            # shape, not the config — identical at tp == 1
+            hkv, hd = pool.shape[-2], pool.shape[-1]
+            k_ctx = pool[bt, li, 0].reshape(1, MB * P, hkv, hd).astype(k.dtype)
+            v_ctx = pool[bt, li, 1].reshape(1, MB * P, hkv, hd).astype(v.dtype)
             out = flash_attention(q, k_ctx, v_ctx, causal=True,
                                   q_offset=start)
-            x = x + jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+            attn = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+            if self._psum_attn:
+                attn = jax.lax.psum(attn, "model")
+            x = x + attn
             h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
-            x = x + swiglu(h2, p["w_gate"], p["w_up"], p["w_down"])
+            mlp = swiglu(h2, p["w_gate"], p["w_up"], p["w_down"])
+            if self._psum_mlp:
+                mlp = jax.lax.psum(mlp, "model")
+            x = x + mlp
         h_last = jax.lax.dynamic_index_in_dim(x[0], nvalid - 1, axis=0,
                                               keepdims=False)
         logits = self._logits(head, h_last)

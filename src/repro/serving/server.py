@@ -2,7 +2,9 @@
 
 No third-party dependencies: ``asyncio.start_server`` + hand-rolled request
 parsing, chunked transfer encoding for streams. One request per connection
-(``Connection: close``). Endpoints:
+(``Connection: close``) by default; GET probe endpoints (``/healthz``,
+``/readyz``, ``/v1/metrics``) honor an explicit ``Connection: keep-alive``
+request header so monitoring loops reuse one socket. Endpoints:
 
 * ``POST /v1/generate`` — JSON in, SSE-style chunked stream out. Body::
 
@@ -80,6 +82,7 @@ class ServerConfig:
     pipeline: bool = False
     prefix_cache: bool = False
     paged_runner: bool = False        # real reduced-model execution
+    tp: int = 1                       # tensor parallelism (devices/replica)
     hbm_blocks: int = 4000
     dram_blocks: int = 100000
     drain_timeout: float = 15.0       # wall seconds for graceful drain
@@ -112,6 +115,8 @@ class ServerConfig:
             problems.append(f"unknown router policy {self.router!r}")
         if self.replicas < 1:
             problems.append("replicas must be >= 1")
+        if self.tp < 1:
+            problems.append("tp must be >= 1")
         if self.prefill_replicas < 1 or self.decode_replicas < 1:
             problems.append("prefill/decode replicas must be >= 1")
         if self.hbm_blocks < 1 or self.dram_blocks < 1:
@@ -142,6 +147,11 @@ class ServerConfig:
 
     def build_engine(self):
         """Construct the engine-like object this config describes."""
+        if self.tp > 1:
+            # must act before anything imports jax (CPU hosts expose one
+            # XLA device unless the flag is set at import time)
+            from repro.launch.hostenv import ensure_host_devices
+            ensure_host_devices(self.tp)
         from repro.configs import HW_PROFILES, ServingConfig, get_config
         from repro.serving.core import EngineCore
         from repro.serving.disagg import DisaggCluster
@@ -152,7 +162,8 @@ class ServerConfig:
                            scheduler=self.scheduler,
                            pipeline=self.pipeline,
                            prefix_cache=self.prefix_cache,
-                           paged_runner=self.paged_runner)
+                           paged_runner=self.paged_runner,
+                           tp=self.tp)
         hw = HW_PROFILES[self.hw]
         runner_cfg = None
         if self.paged_runner:   # real execution: reduced fp32 model on CPU
@@ -247,12 +258,18 @@ def _response_head(status: int, headers: Dict[str, str]) -> bytes:
 
 
 def _json_response(writer: asyncio.StreamWriter, status: int,
-                   obj: object) -> None:
+                   obj: object, *, keep_alive: bool = False) -> None:
     body = json.dumps(obj).encode()
     writer.write(_response_head(status, {
         "Content-Type": "application/json",
         "Content-Length": str(len(body)),
-        "Connection": "close"}) + body)
+        "Connection": "keep-alive" if keep_alive else "close"}) + body)
+
+
+# GET probes that may reuse the connection (explicit opt-in only: clients
+# that never send ``Connection: keep-alive`` see the original one-shot
+# behaviour, response header included)
+_KEEPALIVE_PATHS = frozenset({"/healthz", "/readyz", "/v1/metrics"})
 
 
 def _chunk(data: bytes) -> bytes:
@@ -360,25 +377,37 @@ class InferenceServer:
         task = asyncio.current_task()
         self._conn_tasks.add(task)
         try:
-            try:
-                req = await asyncio.wait_for(_read_http_request(reader),
-                                             REQUEST_TIMEOUT_S)
-            except (asyncio.TimeoutError, asyncio.IncompleteReadError,
-                    ConnectionError):
-                return
-            except HttpError as e:
-                _json_response(writer, e.status, {"error": e.message})
-                return
-            if req is None:
-                return
-            method, path, headers, body = req
-            self.http_requests += 1
-            try:
-                await self._dispatch(method, path, body, reader, writer)
-            except HttpError as e:
-                _json_response(writer, e.status, {"error": e.message})
-            except (ConnectionError, ClientDisconnected):
-                pass
+            while True:                    # loops only on kept-alive probes
+                try:
+                    req = await asyncio.wait_for(_read_http_request(reader),
+                                                 REQUEST_TIMEOUT_S)
+                except (asyncio.TimeoutError, asyncio.IncompleteReadError,
+                        ConnectionError):
+                    return
+                except HttpError as e:
+                    _json_response(writer, e.status, {"error": e.message})
+                    return
+                if req is None:
+                    return
+                method, path, headers, body = req
+                self.http_requests += 1
+                keep = (method == "GET" and path in _KEEPALIVE_PATHS
+                        and headers.get("connection", "").lower()
+                        == "keep-alive")
+                try:
+                    await self._dispatch(method, path, body, reader, writer,
+                                         keep_alive=keep)
+                except HttpError as e:
+                    _json_response(writer, e.status, {"error": e.message})
+                    keep = False           # error responses always close
+                except (ConnectionError, ClientDisconnected):
+                    return
+                if not keep:
+                    return
+                try:
+                    await writer.drain()
+                except ConnectionError:
+                    return
         except asyncio.CancelledError:     # drain cutting off a straggler
             pass
         finally:
@@ -391,30 +420,32 @@ class InferenceServer:
 
     async def _dispatch(self, method: str, path: str, body: bytes,
                         reader: asyncio.StreamReader,
-                        writer: asyncio.StreamWriter) -> None:
+                        writer: asyncio.StreamWriter, *,
+                        keep_alive: bool = False) -> None:
         if path == "/healthz":
             if method != "GET":
                 raise HttpError(405, "use GET")
             if self.service.crashed is not None:
                 _json_response(writer, 500, {
                     "status": "crashed",
-                    "error": repr(self.service.crashed)})
+                    "error": repr(self.service.crashed)},
+                    keep_alive=keep_alive)
             else:
                 _json_response(writer, 200, {
                     "status": "ok",
                     "uptime_s": round(time.monotonic() - self._t_up, 3),
-                    "draining": self._draining})
+                    "draining": self._draining}, keep_alive=keep_alive)
         elif path == "/readyz":
             if method != "GET":
                 raise HttpError(405, "use GET")
             ready, reason, headroom = self._readiness()
             _json_response(writer, 200 if ready else 503, {
                 "ready": ready, "reason": reason,
-                "hbm_headroom": round(headroom, 4)})
+                "hbm_headroom": round(headroom, 4)}, keep_alive=keep_alive)
         elif path == "/v1/metrics":
             if method != "GET":
                 raise HttpError(405, "use GET")
-            await self._metrics(writer)
+            await self._metrics(writer, keep_alive=keep_alive)
         elif path == "/v1/generate":
             if method != "POST":
                 raise HttpError(405, "use POST")
@@ -422,7 +453,8 @@ class InferenceServer:
         else:
             raise HttpError(404, f"no route for {path}")
 
-    async def _metrics(self, writer: asyncio.StreamWriter) -> None:
+    async def _metrics(self, writer: asyncio.StreamWriter, *,
+                       keep_alive: bool = False) -> None:
         try:
             row = await self.service.call(snapshot_report_row)
         except (ServiceStopped, ServiceDraining) as e:
@@ -436,7 +468,7 @@ class InferenceServer:
             "aborted_on_disconnect": self.aborted_on_disconnect,
             "draining": self._draining,
         }
-        _json_response(writer, 200, row)
+        _json_response(writer, 200, row, keep_alive=keep_alive)
 
     # -------------------------------------------------------------- generate
     @staticmethod
@@ -552,7 +584,8 @@ async def serve_main(cfg: ServerConfig, *, install_signals: bool = True,
     log_event("server_up", host=cfg.host, port=server.port,
               model=cfg.model, replicas=cfg.replicas, disagg=cfg.disagg,
               pipeline=cfg.pipeline, prefix_cache=cfg.prefix_cache,
-              paged_runner=cfg.paged_runner, pid=__import__("os").getpid())
+              paged_runner=cfg.paged_runner, tp=cfg.tp,
+              pid=__import__("os").getpid())
     if ready_cb is not None:
         ready_cb(server, service)
     code = await server.run_until_shutdown()

@@ -188,6 +188,52 @@ def test_stream_health_metrics_and_clean_drain():
     assert sut.stop() == 0          # nothing in flight: clean drain
 
 
+def test_probe_keepalive_reuses_one_socket():
+    """GET probe endpoints honor an explicit ``Connection: keep-alive``:
+    sequential /healthz, /readyz and /v1/metrics exchanges ride ONE socket,
+    and a final probe without the header closes it (the default)."""
+
+    def recv_response(s):
+        """Read exactly one Content-Length-framed response off the socket."""
+        raw = b""
+        while b"\r\n\r\n" not in raw:
+            chunk = s.recv(65536)
+            assert chunk, "server closed mid-response"
+            raw += chunk
+        head, _, body = raw.partition(b"\r\n\r\n")
+        headers = dict(
+            line.split(b": ", 1) for line in head.split(b"\r\n")[1:])
+        clen = int(headers[b"Content-Length"])
+        while len(body) < clen:
+            chunk = s.recv(65536)
+            assert chunk, "server closed mid-body"
+            body += chunk
+        status = int(head.split(b" ", 2)[1])
+        return status, headers, json.loads(body)
+
+    with ServerUnderTest(pace=False) as sut:
+        with socket.create_connection(("127.0.0.1", sut.port),
+                                      timeout=30.0) as s:
+            for path, key in (("/healthz", "status"), ("/readyz", "ready"),
+                              ("/v1/metrics", "server"), ("/healthz", None)):
+                s.sendall((f"GET {path} HTTP/1.1\r\nHost: t\r\n"
+                           f"Connection: keep-alive\r\n\r\n").encode())
+                status, headers, obj = recv_response(s)
+                assert status == 200
+                assert headers[b"Connection"] == b"keep-alive"
+                if key is not None:
+                    assert key in obj
+            # the server's request counter saw all 4 over one connection
+            assert sut.server.http_requests >= 4
+            # no keep-alive header -> one-shot semantics, socket closes
+            s.sendall(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n")
+            status, headers, _ = recv_response(s)
+            assert status == 200
+            assert headers[b"Connection"] == b"close"
+            assert s.recv(65536) == b""          # server closed its end
+    assert sut.stop() == 0
+
+
 def test_concurrent_clients():
     n = 8
     with ServerUnderTest(pace=False, replicas=2, pipeline=True) as sut:
@@ -336,8 +382,15 @@ def test_exclusive_driver_claim_blocks_sync_surfaces():
             # the engine is claimed: blocking surfaces must refuse loudly
             with pytest.raises(RuntimeError, match="AsyncServingEngine"):
                 core.drain()
-            with pytest.raises(RuntimeError, match="AsyncServingEngine"):
-                h._handle.result()          # sync pump under the hood
+            # result() pumps only while unfinished; the pace=False driver
+            # may have finished the request already, making it a cached
+            # read. Either way it must never step the claimed engine.
+            try:
+                cached = h._handle.result()
+            except RuntimeError as e:
+                assert "AsyncServingEngine" in str(e)
+            else:
+                assert cached.finished
             out = await h.result()          # async path still works
             assert out.finished and out.tokens_generated == 4
         finally:
