@@ -1,0 +1,110 @@
+"""Quantized KV tier at a fixed HBM byte budget: capacity, rotation traffic,
+and SLO attainment of ``kv_dtype="int8"`` vs the bf16 baseline.
+
+Both runs serve the SAME ShareGPT trace at a memory-contention pressure
+point for qwen2.5-32b, but size ``num_hbm_blocks`` from one shared byte
+budget via ``hbm_block_capacity`` — exactly how ``--hbm-budget-gb`` sizes a
+real deployment. The int8 tier stores int8 values plus per-(block, layer,
+side, kv-head) fp32 scale rows, so the same budget holds ~2x the blocks and
+every rotated block costs ~half the C2C bytes. Asserted:
+
+  * blocks-per-budget ratio int8/bf16 >= 1.9 (scale rows cost the rest)
+  * rotation bytes per moved block <= 0.55x bf16 (measured from the
+    DuplexKV transfer counters, not just the static block_bytes)
+  * TTFT attainment of int8 >= bf16 at the same pressure point
+
+    PYTHONPATH=src python -m benchmarks.bench_kv_quant [--quick]
+
+CSV: kv_dtype,hbm_blocks,block_bytes,d2h_bytes,d2h_blocks,h2d_bytes,
+ttft_attainment,tbt_attainment,p99_ttft,throughput_tok_s,rotations.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs import GH200, ServingConfig, get_config
+from repro.core.duplexkv import block_bytes_of, hbm_block_capacity
+from repro.serving.engine import ServingEngine
+from repro.serving.workload import generate_requests
+
+from benchmarks.common import QUICK
+
+MODEL = "qwen2.5-32b"
+BLOCK_SIZE = 16
+HBM_BUDGET_BYTES = 4 << 30           # 1024 bf16 blocks: past the knee —
+RPS = 22                             # bf16 rotates heavily, int8 barely
+DURATION = 8.0 if QUICK else 20.0
+
+
+def run_case(kv_dtype: str) -> dict:
+    cfg = get_config(MODEL)
+    blocks = hbm_block_capacity(cfg, BLOCK_SIZE, HBM_BUDGET_BYTES,
+                                kv_dtype=kv_dtype)
+    sv = ServingConfig(num_hbm_blocks=blocks, num_dram_blocks=100000,
+                       scheduler="rotasched", block_size=BLOCK_SIZE,
+                       kv_dtype=kv_dtype)
+    reqs = generate_requests("sharegpt", rps=RPS, duration_s=DURATION,
+                             seed=1)
+    eng = ServingEngine(cfg, sv, GH200)
+    t0 = time.time()
+    rep = eng.run(reqs, max_time_s=30 * DURATION)
+    tc = eng.kv.transfer_counters()
+    bb = eng.kv.block_bytes
+    return dict(kv_dtype=kv_dtype, hbm_blocks=blocks, block_bytes=bb,
+                d2h_bytes=tc["d2h_bytes"],
+                d2h_blocks=tc["d2h_bytes"] // bb,
+                h2d_bytes=tc["h2d_bytes"],
+                ttft_attainment=rep.ttft_attainment,
+                tbt_attainment=rep.tbt_attainment,
+                p99_ttft=rep.p99_ttft,
+                throughput_tok_s=rep.throughput_tok_s,
+                rotations=eng.stats.active_rotations
+                + eng.stats.passive_preemptions,
+                wall_s=round(time.time() - t0, 1))
+
+
+def main() -> dict:
+    cfg = get_config(MODEL)
+    bb16, _ = block_bytes_of(cfg, BLOCK_SIZE)
+    bb8, _ = block_bytes_of(cfg, BLOCK_SIZE, kv_dtype="int8")
+    cols = ("kv_dtype", "hbm_blocks", "block_bytes", "d2h_bytes",
+            "d2h_blocks", "h2d_bytes", "ttft_attainment", "tbt_attainment",
+            "p99_ttft", "throughput_tok_s", "rotations")
+    print(",".join(cols))
+    rows = {}
+    for kv_dtype in ("bf16", "int8"):
+        row = run_case(kv_dtype)
+        rows[kv_dtype] = row
+        print(",".join(f"{row[c]:.4f}" if isinstance(row[c], float)
+                       else str(row[c]) for c in cols)
+              + f"  # {row['wall_s']:.0f}s", flush=True)
+
+    cap_ratio = rows["int8"]["hbm_blocks"] / rows["bf16"]["hbm_blocks"]
+    bytes_per_block = {d: rows[d]["d2h_bytes"] / max(rows[d]["d2h_blocks"], 1)
+                       for d in rows}
+    rot_ratio = bytes_per_block["int8"] / max(bytes_per_block["bf16"], 1)
+    assert rows["bf16"]["d2h_blocks"] > 0, \
+        "pressure point produced no rotation traffic — budget too generous"
+    assert cap_ratio >= 1.9, \
+        f"int8 capacity gain {cap_ratio:.3f}x < 1.9x at the same budget"
+    assert rot_ratio <= 0.55, \
+        f"int8 rotation bytes/block {rot_ratio:.3f}x bf16 (> 0.55x)"
+    assert rows["int8"]["rotations"] < rows["bf16"]["rotations"], \
+        "doubled capacity did not reduce rotation pressure"
+    for m in ("ttft_attainment", "tbt_attainment"):
+        assert rows["int8"][m] >= rows["bf16"][m] - 1e-9, \
+            f"int8 {m} {rows['int8'][m]:.4f} < bf16 {rows['bf16'][m]:.4f}"
+    print(f"# budget {HBM_BUDGET_BYTES >> 30} GiB: "
+          f"{rows['bf16']['hbm_blocks']} bf16 vs {rows['int8']['hbm_blocks']}"
+          f" int8 blocks ({cap_ratio:.3f}x), rotation bytes/block "
+          f"{bytes_per_block['bf16']:.0f} -> {bytes_per_block['int8']:.0f} "
+          f"({rot_ratio:.3f}x), ttft_attainment "
+          f"{rows['bf16']['ttft_attainment']:.4f} -> "
+          f"{rows['int8']['ttft_attainment']:.4f}", flush=True)
+    return dict(budget_bytes=HBM_BUDGET_BYTES, block_bytes_bf16=bb16,
+                block_bytes_int8=bb8, capacity_ratio=cap_ratio,
+                rotation_bytes_per_block_ratio=rot_ratio, rows=rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,14 @@ bridge, and the wall-paced engine. Each client is closed-loop (next request
 starts when the previous stream finishes), so client count is the offered
 concurrency.
 
-CSV: clients, n_requests, tokens, p50/p99 TTFT ms, p50/p99 TBT ms, tok/s.
+``--reuse`` switches clients to HTTP keep-alive: one persistent socket per
+client, ``Connection: keep-alive`` on every POST, and the terminal chunk of
+each stream consumed before the next request goes out on the same socket —
+the steady-state load-generator mode the server's generate keep-alive
+exists for (no per-request TCP handshake in TTFT).
+
+CSV: clients, n_requests, tokens, conns, p50/p99 TTFT ms, p50/p99 TBT ms,
+tok/s.
 """
 import asyncio
 import json
@@ -21,6 +28,7 @@ import time
 from repro.serving.server import ServerConfig, serve_main
 
 QUICK = "--quick" in sys.argv
+REUSE = "--reuse" in sys.argv
 CLIENTS_GRID = (1, 4, 8) if QUICK else (1, 2, 4, 8, 16)
 LEVEL_SECONDS = 4.0 if QUICK else 8.0
 MAX_TOKENS = 12
@@ -63,28 +71,44 @@ class _Server:
         self._t.join(60)
 
 
-def one_stream(port, ttfts, tbts, counters):
-    """One POST /v1/generate, streamed; appends wall latencies."""
+class _Conn:
+    """One client socket + its receive buffer (survives across requests in
+    reuse mode: bytes past one stream's terminal chunk belong to the next
+    response)."""
+
+    def __init__(self, port):
+        self.sock = socket.create_connection(("127.0.0.1", port), timeout=60)
+        self.buf = b""
+
+    def close(self):
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+def one_stream(conn, ttfts, tbts, counters, reuse=False):
+    """One POST /v1/generate on ``conn``, streamed; appends wall latencies.
+    Returns True when the socket can carry another request (reuse mode and
+    the stream ended at its terminal chunk)."""
     body = json.dumps({"prompt_len": PROMPT_LEN,
                        "max_tokens": MAX_TOKENS}).encode()
     head = (f"POST /v1/generate HTTP/1.1\r\nHost: b\r\n"
+            f"Connection: {'keep-alive' if reuse else 'close'}\r\n"
             f"Content-Length: {len(body)}\r\n\r\n").encode()
     t0 = time.monotonic()
     t_prev = None
-    with socket.create_connection(("127.0.0.1", port), timeout=60) as s:
-        s.sendall(head + body)
-        buf, seen = b"", 0
-        while True:
-            chunk = s.recv(65536)
-            if not chunk:
-                return
-            buf += chunk
-            while (i := buf.find(b"data: ")) != -1:
-                j = buf.find(b"\n\n", i)
+    conn.sock.sendall(head + body)
+    seen = 0
+    finished = False
+    while True:
+        if not finished:
+            while (i := conn.buf.find(b"data: ")) != -1:
+                j = conn.buf.find(b"\n\n", i)
                 if j == -1:
                     break
-                evt = json.loads(buf[i + 6:j])
-                buf = buf[j + 2:]
+                evt = json.loads(conn.buf[i + 6:j])
+                conn.buf = conn.buf[j + 2:]
                 now = time.monotonic()
                 seen += evt["new_tokens"]
                 if t_prev is None:
@@ -93,22 +117,45 @@ def one_stream(port, ttfts, tbts, counters):
                     tbts.append(now - t_prev)
                 t_prev = now
                 if evt["finished"]:
-                    counters["requests"] += 1
-                    counters["tokens"] += seen
-                    return
+                    finished = True
+                    break
+        if finished:
+            # consume through the terminal chunk: the next request's
+            # response must start at a chunk boundary on a reused socket
+            k = conn.buf.find(b"0\r\n\r\n")
+            if k != -1:
+                conn.buf = conn.buf[k + 5:]
+                counters["requests"] += 1
+                counters["tokens"] += seen
+                return reuse
+        chunk = conn.sock.recv(65536)
+        if not chunk:
+            return False
+        conn.buf += chunk
 
 
-def run_level(port, n_clients, seconds):
+def run_level(port, n_clients, seconds, reuse=False):
     ttfts, tbts = [], []
-    counters = {"requests": 0, "tokens": 0}
+    counters = {"requests": 0, "tokens": 0, "conns": 0}
     lock = threading.Lock()
     deadline = time.monotonic() + seconds
 
     def client():
         my_ttft, my_tbt = [], []
-        my_counts = {"requests": 0, "tokens": 0}
-        while time.monotonic() < deadline:
-            one_stream(port, my_ttft, my_tbt, my_counts)
+        my_counts = {"requests": 0, "tokens": 0, "conns": 0}
+        conn = None
+        try:
+            while time.monotonic() < deadline:
+                if conn is None:
+                    conn = _Conn(port)
+                    my_counts["conns"] += 1
+                if not one_stream(conn, my_ttft, my_tbt, my_counts,
+                                  reuse=reuse):
+                    conn.close()
+                    conn = None
+        finally:
+            if conn is not None:
+                conn.close()
         with lock:
             ttfts.extend(my_ttft)
             tbts.extend(my_tbt)
@@ -123,7 +170,7 @@ def run_level(port, n_clients, seconds):
         t.join()
     wall = time.monotonic() - t0
     return dict(clients=n_clients, n_requests=counters["requests"],
-                tokens=counters["tokens"],
+                tokens=counters["tokens"], conns=counters["conns"],
                 p50_ttft_ms=1e3 * pct(ttfts, 50),
                 p99_ttft_ms=1e3 * pct(ttfts, 99),
                 p50_tbt_ms=1e3 * pct(tbts, 50),
@@ -135,14 +182,24 @@ def main():
     cfg = ServerConfig(port=0, model="qwen2.5-32b", replicas=2,
                        pipeline=True, pace=True, drain_timeout=20.0,
                        hbm_blocks=2000, dram_blocks=20000).validate()
-    cols = ("clients", "n_requests", "tokens", "p50_ttft_ms", "p99_ttft_ms",
-            "p50_tbt_ms", "p99_tbt_ms", "tok_s")
+    cols = ("clients", "n_requests", "tokens", "conns", "p50_ttft_ms",
+            "p99_ttft_ms", "p50_tbt_ms", "p99_tbt_ms", "tok_s")
     print(",".join(cols))
+    levels = []
     with _Server(cfg) as srv:
         for n in CLIENTS_GRID:
-            row = run_level(srv.server.port, n, LEVEL_SECONDS)
+            row = run_level(srv.server.port, n, LEVEL_SECONDS, reuse=REUSE)
+            levels.append(row)
             print(",".join(f"{row[c]:.2f}" if isinstance(row[c], float)
                            else str(row[c]) for c in cols), flush=True)
+    if REUSE:
+        # reuse means connections don't scale with requests: each client
+        # holds one socket for the whole level unless the server closed it
+        total_req = sum(r["n_requests"] for r in levels)
+        total_conn = sum(r["conns"] for r in levels)
+        print(f"# reuse: {total_req} requests over {total_conn} connections",
+              flush=True)
+    return {"reuse": REUSE, "levels": levels}
 
 
 if __name__ == "__main__":

@@ -2,8 +2,14 @@
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig16,table1]
 
-Prints ``name,seconds,derived`` CSV rows (per-module sections).
+Prints ``name,seconds,derived`` CSV rows (per-module sections) and, for
+every module attempted, writes a machine-readable
+``benchmarks/results/BENCH_<tag>.json`` (status, wall seconds, argv, and —
+when the module's ``main()`` returns a dict — its headline metrics), so the
+perf trajectory across PRs is tracked in-repo instead of only in stdout.
 """
+import json
+import os
 import sys
 import time
 import traceback
@@ -28,7 +34,18 @@ MODULES = [
     ("disagg", "benchmarks.bench_disagg"),
     ("pipeline", "benchmarks.bench_pipeline"),
     ("server", "benchmarks.bench_server"),
+    ("kv_quant", "benchmarks.bench_kv_quant"),
 ]
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _write_result(tag: str, record: dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"BENCH_{tag}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, sort_keys=True, default=str)
+        f.write("\n")
 
 
 def main() -> None:
@@ -45,20 +62,31 @@ def main() -> None:
             continue
         print(f"# === {tag} ({modname}) ===", flush=True)
         t0 = time.time()
+        record = dict(bench=tag, module=modname, argv=sys.argv[1:],
+                      status="ok", metrics=None)
         try:
-            importlib.import_module(modname).main()
+            ret = importlib.import_module(modname).main()
+            if isinstance(ret, dict):
+                record["metrics"] = ret
             print(f"# {tag} done in {time.time()-t0:.0f}s", flush=True)
         except OutOfBlocks:
             # a capacity bug in the engine under benchmark is a real defect,
             # not a bad config — fail the whole run
+            record.update(status="failed", error="OutOfBlocks")
+            record["seconds"] = round(time.time() - t0, 1)
+            _write_result(tag, record)
             raise
         except (ImportError, OSError, RuntimeError, ValueError, KeyError,
-                TypeError) as e:
+                TypeError, AssertionError) as e:
             # environment/config failures (missing optional dep, bad grid
-            # point, jax backend quirk): log with full context and move on
-            # to the next module; anything else propagates
+            # point, jax backend quirk) and failed headline assertions: log
+            # with full context and move on; anything else propagates
             print(f"# {tag} FAILED ({type(e).__name__}):\n"
                   f"{traceback.format_exc()}", flush=True)
+            record.update(status="failed",
+                          error=f"{type(e).__name__}: {e}")
+        record["seconds"] = round(time.time() - t0, 1)
+        _write_result(tag, record)
     print(f"# total {time.time()-t_all:.0f}s")
 
 

@@ -63,6 +63,11 @@ class FrontendConfig:
     embed_dim: int = 0          # raw embedding dim before projection
 
 
+# element widths for the dtypes model configs declare (``ModelConfig.dtype``)
+DTYPE_BYTES = {"bfloat16": 2, "bf16": 2, "float16": 2, "fp16": 2,
+               "float32": 4, "fp32": 4, "int8": 1}
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str
@@ -174,7 +179,19 @@ class ModelConfig:
         n_moe = sum(1 for i in range(self.num_layers) if self.layer_is_moe(i))
         return self.param_count() - n_moe * inactive_per_moe_layer
 
-    def kv_bytes_per_token(self, dtype_bytes: int = 2) -> int:
+    def dtype_bytes(self) -> int:
+        """Width of one activation/KV element in the model's own dtype."""
+        return DTYPE_BYTES[self.dtype]
+
+    def kv_bytes_per_token(self, dtype_bytes: Optional[int] = None) -> int:
+        """KV bytes one token pins across every attention layer. With no
+        argument the element width derives from ``self.dtype`` (it used to
+        silently assume 2 bytes even for fp32 reduced-model runs); pass
+        ``dtype_bytes`` explicitly for a quantized cache tier (e.g. 1 for
+        the int8 KV pool — scale-row overhead is per *block*, so it lives
+        in ``duplexkv.block_bytes_of``, not here)."""
+        if dtype_bytes is None:
+            dtype_bytes = self.dtype_bytes()
         per_attn = 2 * self.num_kv_heads * self.head_dim * dtype_bytes
         return per_attn * self.num_attn_layers
 
@@ -401,6 +418,19 @@ class ServingConfig:
     # replicated-attention fallback). See DESIGN.md §Tensor-parallel
     # execution.
     tp: int = 1
+    # KV cache storage dtype. "bf16" (default) stores KV in the model's own
+    # dtype — bit-identical to the golden replay. "int8" stores a blockwise
+    # -quantized pool: int8 values with one fp32 scale per (block, layer,
+    # K/V, kv-head), halving bytes-per-block, so admission fits ~2x blocks
+    # per HBM budget and every rotation/migration leg moves ~half the bytes
+    # (quality guarded by tolerance tests, not bit-parity). See DESIGN.md
+    # §Quantized KV tier.
+    kv_dtype: str = "bf16"
+
+    def __post_init__(self):
+        if self.kv_dtype not in ("bf16", "int8"):
+            raise ValueError(
+                f"kv_dtype must be 'bf16' or 'int8', got {self.kv_dtype!r}")
 
 
 # ---------------------------------------------------------------------------

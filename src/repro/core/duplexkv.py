@@ -48,8 +48,16 @@ def prefix_hash_chain(prompt_ids: Sequence[int], block_size: int) -> List[int]:
     return chain
 
 
-def block_bytes_of(cfg: ModelConfig, block_size: int) -> Tuple[int, int]:
+def block_bytes_of(cfg: ModelConfig, block_size: int,
+                   kv_dtype: str = "bf16") -> Tuple[int, int]:
     """(bytes per KV block across all layers, segments in layer-first layout).
+
+    ``kv_dtype`` selects the cache storage tier: ``"bf16"`` (default)
+    stores KV in the model's own dtype (element width from
+    ``ModelConfig.dtype``); ``"int8"`` stores 1-byte values plus one fp32
+    scale per (layer, K/V side, kv head) of the block — the quantized
+    tier's ~2x bytes-per-block cut is what doubles both admission capacity
+    per HBM budget and effective rotation throughput per C2C byte.
 
     SSM/hybrid: attention layers contribute paged KV; SSM state is rotated as
     one pseudo-block per request (handled by the engine); here we size the
@@ -66,7 +74,21 @@ def block_bytes_of(cfg: ModelConfig, block_size: int) -> Tuple[int, int]:
         state = (h * s.head_dim * s.state_dim + (s.conv_width - 1)
                  * (d_in + 2 * s.state_dim)) * 2 * cfg.num_layers
         return state, cfg.num_layers
+    if kv_dtype == "int8":
+        values = cfg.kv_bytes_per_token(dtype_bytes=1) * block_size
+        scales = cfg.num_attn_layers * 2 * cfg.num_kv_heads * 4
+        return values + scales, n_seg
     return per_token * block_size, n_seg
+
+
+def hbm_block_capacity(cfg: ModelConfig, block_size: int, hbm_bytes: int,
+                       kv_dtype: str = "bf16") -> int:
+    """Blocks an HBM byte budget admits at this storage tier — what the
+    AdmissionController's block pool should be sized to. The int8 tier fits
+    ~2x the bf16 count for the same budget (scale rows cost one fp32 per
+    (layer, side, head) per block against P·D int8 values)."""
+    bb, _ = block_bytes_of(cfg, block_size, kv_dtype=kv_dtype)
+    return max(int(hbm_bytes) // bb, 1)
 
 
 @dataclasses.dataclass
@@ -106,7 +128,9 @@ class DuplexKV:
         self.cfg = cfg
         self.serving = serving
         self.hw = hw
-        bb, segs = block_bytes_of(cfg, serving.block_size)
+        self.kv_dtype = getattr(serving, "kv_dtype", "bf16")
+        bb, segs = block_bytes_of(cfg, serving.block_size,
+                                  kv_dtype=self.kv_dtype)
         self.block_bytes = bb
         layout_segs = 1 if serving.block_first_layout else segs
         self.prefix_cache = serving.prefix_cache

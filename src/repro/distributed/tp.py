@@ -102,6 +102,17 @@ def pool_pspec(plan: TPPlan):
     return P()
 
 
+def scale_pspec(plan: TPPlan):
+    """Spec of the quantized pool's scale array ``(rows, L, 2, Hkv)``: the
+    per-(block, layer, side, head) scales shard along the kv-head dim with
+    the pool — the quantization reduction axes (P, D) are never sharded, so
+    per-shard scales are exact, not approximations."""
+    from jax.sharding import PartitionSpec as P
+    if plan.shard_kv:
+        return P(None, None, None, "model")
+    return P()
+
+
 def layer_pspecs(plan: TPPlan) -> dict:
     """Per-layer weight specs (keys of the paged runner's layer dicts)."""
     from jax.sharding import PartitionSpec as P

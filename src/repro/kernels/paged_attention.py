@@ -8,10 +8,17 @@ block table is scalar-prefetched so the index_map can do the indirection.
 
 Grid: (B, num_blocks_per_seq) with the block dim innermost; VMEM scratch
 carries the online-softmax state across a request's blocks.
+
+Quantized KV tier (``kv_scales`` passed): the pool is int8 and HBM reads
+stay int8 — only the (P, Hkv, D) tile in VMEM is widened, and the per-
+(block, layer, K/V, head) fp32 scales ride as a small side ref addressed by
+the SAME block-table indirection, so dequantization is fused into the
+attention kernel (no dequantized copy of the pool ever exists in HBM).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,9 +28,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(bt_ref, cl_ref, q_ref, kv_ref, o_ref, acc_ref, m_ref,
-                  l_ref, *, scale: float, page: int, group: int,
-                  layered: bool):
+def _paged_kernel(bt_ref, cl_ref, q_ref, kv_ref, *rest, scale: float,
+                  page: int, group: int, layered: bool, quantized: bool):
+    if quantized:
+        sc_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
+        sc_ref = None
     b = pl.program_id(0)
     j = pl.program_id(1)
     nb = pl.num_programs(1)
@@ -38,6 +49,12 @@ def _paged_kernel(bt_ref, cl_ref, q_ref, kv_ref, o_ref, acc_ref, m_ref,
     kv = kv_ref[0, 0] if layered else kv_ref[0]
     k = kv[0].astype(jnp.float32)                       # (P, Hkv, D)
     v = kv[1].astype(jnp.float32)
+    if quantized:
+        # fused dequant: one fp32 scale per (K/V side, kv head) of this
+        # block — the HBM tile stayed int8, only VMEM sees floats
+        sc = sc_ref[0, 0] if layered else sc_ref[0]     # (2, Hkv)
+        k = k * sc[0][None, :, None]
+        v = v * sc[1][None, :, None]
     kt = k.transpose(1, 0, 2)                           # (Hkv, P, D)
     vt = v.transpose(1, 0, 2)
 
@@ -67,6 +84,7 @@ def _paged_kernel(bt_ref, cl_ref, q_ref, kv_ref, o_ref, acc_ref, m_ref,
 def paged_attention_tpu(q: jax.Array, kv_pool: jax.Array,
                         block_tables: jax.Array, context_lens: jax.Array,
                         *, layer: int = -1,
+                        kv_scales: Optional[jax.Array] = None,
                         interpret: bool = True) -> jax.Array:
     """q: (B, H, D); kv_pool: (NB, 2, P, Hkv, D) block-first;
     block_tables: (B, MB) int32; context_lens: (B,) int32 -> (B, H, D).
@@ -75,9 +93,16 @@ def paged_attention_tpu(q: jax.Array, kv_pool: jax.Array,
     rows hold *every* layer of one logical block contiguously (the paper's
     block-first layout, segments_per_block == 1): the BlockSpec index_map
     picks (block row, layer) so no per-layer slice of the pool is ever
-    materialized outside the kernel."""
+    materialized outside the kernel.
+
+    ``kv_scales`` enables the quantized tier: the pool is int8 and scales
+    — fp32, shaped (NB, 2, Hkv) or (NB, L, 2, Hkv) when layered — are
+    dequantized inside the kernel (one multiply per tile). Omitted (the
+    default), the call is bit-identical to the unquantized kernel.
+    """
     B, H, D = q.shape
     layered = layer >= 0
+    quantized = kv_scales is not None
     if layered:
         NB, _, _, P, Hkv, _ = kv_pool.shape
     else:
@@ -87,22 +112,32 @@ def paged_attention_tpu(q: jax.Array, kv_pool: jax.Array,
     qg = q.reshape(B, Hkv, group, D)
 
     kernel = functools.partial(_paged_kernel, scale=D ** -0.5, page=P,
-                               group=group, layered=layered)
+                               group=group, layered=layered,
+                               quantized=quantized)
     if layered:
         kv_spec = pl.BlockSpec(
             (1, 1, 2, P, Hkv, D),
             lambda b, j, bt, cl: (bt[b, j], layer, 0, 0, 0, 0))
+        sc_spec = pl.BlockSpec(
+            (1, 1, 2, Hkv), lambda b, j, bt, cl: (bt[b, j], layer, 0, 0))
     else:
         kv_spec = pl.BlockSpec(
             (1, 2, P, Hkv, D),
             lambda b, j, bt, cl: (bt[b, j], 0, 0, 0, 0))
+        sc_spec = pl.BlockSpec(
+            (1, 2, Hkv), lambda b, j, bt, cl: (bt[b, j], 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, Hkv, group, D), lambda b, j, bt, cl: (b, 0, 0, 0)),
+        kv_spec,
+    ]
+    operands = [block_tables, context_lens, qg, kv_pool]
+    if quantized:
+        in_specs.append(sc_spec)
+        operands.append(kv_scales)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, MB),
-        in_specs=[
-            pl.BlockSpec((1, Hkv, group, D), lambda b, j, bt, cl: (b, 0, 0, 0)),
-            kv_spec,
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, Hkv, group, D),
                                lambda b, j, bt, cl: (b, 0, 0, 0)),
         scratch_shapes=[
@@ -115,5 +150,5 @@ def paged_attention_tpu(q: jax.Array, kv_pool: jax.Array,
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), q.dtype),
         interpret=interpret,
-    )(block_tables, context_lens, qg, kv_pool)
+    )(*operands)
     return out.reshape(B, H, D)

@@ -1,0 +1,97 @@
+"""Blockwise int8 KV quantization for the paged pool (DESIGN.md §Quantized
+KV tier).
+
+Granularity is per (block row, layer, K/V side, kv head): one fp32 scale
+covers the ``(P, D)`` tile of a head inside one logical block. That keeps
+the scale array tiny next to the pool (``2·L·Hkv`` floats per block vs
+``2·L·P·Hkv·D`` int8 values), lets scales shard along the kv-head dim under
+tensor parallelism exactly like the pool (the reduction axes P and D are
+never sharded), and keeps quantization *shape-preserving* — the int8 pool
+has the same shape as the bf16 pool, so every row-addressed path (the block
+table's slot ids, ``kv_copy_tpu`` descriptors, staging, the host tier)
+works unchanged. Same idiom as ``optimizer/adamw.py``'s 8-bit moments:
+``scale = amax/127``, round-clip to ``[-127, 127]``.
+
+Streaming writes (decode appends one token per step) use a *running* block
+scale: when a new token's amplitude exceeds the block's current scale, the
+already-quantized int8 content of that row is rescaled in place
+(``round(q · old/new)``) before the token lands. This loses at most half an
+LSB per scale growth — the price of per-block (not per-token) scales; the
+tolerance tests in ``tests/test_kv_quant.py`` bound it.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# floor for scales: keeps 0-amplitude (freshly zeroed) blocks from dividing
+# by zero while still representing them exactly (0 / eps == 0)
+SCALE_EPS = 1e-12
+
+
+def kv_scale_shape(pool_shape: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Scale-array shape for a pool shaped ``(..., P, Hkv, D)``: drop the
+    token (P) and head-dim (D) axes — one scale per remaining index."""
+    return pool_shape[:-3] + (pool_shape[-2],)
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """``(..., P, Hkv, D)`` float -> (int8 same shape, fp32 scales
+    ``(..., Hkv)``). One scale per (leading index, kv head)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(-3, -1))
+    scale = jnp.maximum(amax / 127.0, SCALE_EPS)
+    q = jnp.clip(jnp.round(xf / scale[..., None, :, None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array,
+                  dtype=jnp.float32) -> jax.Array:
+    """Inverse of ``quantize_kv``: int8 ``(..., P, Hkv, D)`` + fp32 scales
+    ``(..., Hkv)`` -> float values."""
+    return (q.astype(jnp.float32)
+            * scale[..., None, :, None]).astype(dtype)
+
+
+def quant_store_tokens(pool: jax.Array, scales: jax.Array, wrow: jax.Array,
+                       lrow: jax.Array, side: int, woff: jax.Array,
+                       vals: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Scatter per-token K or V vectors into the int8 pool, maintaining the
+    running per-(block, layer, side, head) scales.
+
+    pool: ``(NB, L, 2, P, Hkv, D)`` int8; scales: ``(NB, L, 2, Hkv)`` fp32;
+    wrow/lrow/woff: ``(T,)`` int32 pool row / layer / in-block offset per
+    token; side: 0 (K) or 1 (V); vals: ``(T, Hkv, D)`` float.
+
+    Rows hit by several tokens of one call (a prefill chunk inside one
+    block, padded lanes on the trash row) are safe: the gathered old scale
+    and the post-scatter-max new scale are per-row quantities, so duplicate
+    lanes compute identical rescaled rows before their distinct ``woff``
+    writes land.
+
+    A write at in-block offset 0 RESETS the row's running scale first: a
+    freed-and-reallocated pool row keeps the previous tenant's (possibly
+    huge) scale, and quantizing a fresh request against it would waste the
+    whole int8 range. Offset 0 is written exactly once per (block, layer,
+    side) lifetime — appends are monotonic and partially filled blocks are
+    only ever resumed past their watermark — so the reset is sound.
+    """
+    vf = vals.astype(jnp.float32)
+    tok_scale = jnp.maximum(jnp.max(jnp.abs(vf), axis=-1) / 127.0,
+                            SCALE_EPS)                          # (T, Hkv)
+    reset = jnp.where(woff == 0, SCALE_EPS, jnp.inf)            # (T,)
+    scales = scales.at[wrow, lrow, side].min(
+        jnp.broadcast_to(reset[:, None], tok_scale.shape))
+    old = scales[wrow, lrow, side]                              # (T, Hkv)
+    scales = scales.at[wrow, lrow, side].max(tok_scale)
+    new = scales[wrow, lrow, side]                              # (T, Hkv)
+    # rescale previously quantized content of rows whose scale grew
+    row = pool[wrow, lrow, side].astype(jnp.float32)            # (T,P,Hkv,D)
+    ratio = (old / new)[:, None, :, None]
+    pool = pool.at[wrow, lrow, side].set(
+        jnp.round(row * ratio).astype(jnp.int8))
+    q = jnp.clip(jnp.round(vf / new[:, :, None]), -127, 127)
+    pool = pool.at[wrow, lrow, side, woff].set(q.astype(jnp.int8))
+    return pool, scales

@@ -88,10 +88,13 @@ def main(argv=None) -> int:
         def attach_data_backend(self, store):
             pass
 
-    def runner_cases(tp):
-        """The four pool-carrying jit boundaries of one runner."""
+    def runner_cases(tp, kv_dtype="bf16"):
+        """The four pool-carrying jit boundaries of one runner. Each case
+        lists every donated-buffer shape to audit — the quantized tier adds
+        the scale array (its own donated parameter) to every boundary."""
         runner = PagedModelRunner(
-            cfg, dataclasses.replace(sv, tp=tp), GH200, seed=0)
+            cfg, dataclasses.replace(sv, tp=tp, kv_dtype=kv_dtype),
+            GH200, seed=0)
         runner.bind(_KV())
         store = runner.store
         pool = store.pool
@@ -100,21 +103,40 @@ def main(argv=None) -> int:
         bt = jnp.zeros((2, 2), jnp.int32)
         ids = jnp.zeros(8, jnp.int32)
         zero = jnp.asarray(0, jnp.int32)
-        tag = f" [tp={tp}]" if tp > 1 else ""
+        tag = "".join((f" [tp={tp}]" if tp > 1 else "",
+                       " [int8]" if store.quantized else ""))
+        if store.quantized:
+            sc = store.scales
+            srows = jnp.zeros((2,) + store.scale_row_shape, jnp.float32)
+            shapes = [pool.shape, sc.shape]
+            return runner, [
+                (f"PagedKVStore._jit_copy_q{tag}", store._jit_copy_q,
+                 (pool, sc, two, two), True, shapes),
+                (f"PagedKVStore._jit_upload_q{tag}", store._jit_upload_q,
+                 (pool, sc, rows, srows, zero), True, shapes),
+                (f"PagedModelRunner._jit_decode{tag}", runner._jit_decode,
+                 (runner._layers, runner._head, pool, sc, two, bt, two),
+                 True, shapes),
+                (f"PagedModelRunner._jit_prefill{tag}", runner._jit_prefill,
+                 (runner._layers, runner._head, pool, sc, ids, zero,
+                  jnp.asarray(8, jnp.int32), two), True, shapes),
+            ]
         return runner, [
-            # (name, jitted fn, args, expect_donated)
+            # (name, jitted fn, args, expect_donated, shapes)
             (f"PagedKVStore._jit_copy{tag}", store._jit_copy,
-             (pool, two, two), True),
+             (pool, two, two), True, [pool.shape]),
             (f"PagedKVStore._jit_upload{tag}", store._jit_upload,
-             (pool, rows, zero), True),
+             (pool, rows, zero), True, [pool.shape]),
             (f"PagedModelRunner._jit_decode{tag}", runner._jit_decode,
-             (runner._layers, runner._head, pool, two, bt, two), True),
+             (runner._layers, runner._head, pool, two, bt, two), True,
+             [pool.shape]),
             (f"PagedModelRunner._jit_prefill{tag}", runner._jit_prefill,
              (runner._layers, runner._head, pool, ids, zero,
-              jnp.asarray(8, jnp.int32), two), True),
+              jnp.asarray(8, jnp.int32), two), True, [pool.shape]),
         ]
 
     runner, cases = runner_cases(1)
+    cases += runner_cases(1, kv_dtype="int8")[1]
     pool = runner.store.pool
     ps = pool.shape
     two = jnp.zeros(2, jnp.int32)
@@ -122,6 +144,7 @@ def main(argv=None) -> int:
         # the sharded boundaries: same global pool shape in the signature,
         # donation recorded as jax.buffer_donor
         cases += runner_cases(2)[1]
+        cases += runner_cases(2, kv_dtype="int8")[1]
     else:
         print("# note: 1 XLA device — tp=2 sharded boundaries not audited "
               "(set XLA_FLAGS=--xla_force_host_platform_device_count=2)")
@@ -133,21 +156,25 @@ def main(argv=None) -> int:
     flat = pool.reshape(ps[0], -1)
     bare = jax.jit(functools.partial(kv_copy_tpu, interpret=True))
     cases.append(("kv_copy_tpu (no donate — negative control)", bare,
-                  (flat, two, two), False))
+                  (flat, two, two), False, [flat.shape]))
 
     failures = []
-    print(f"{'jit boundary':44} {'pool arg':>8} {'donated':>8} "
+    print(f"{'jit boundary':48} {'buf arg':>8} {'donated':>8} "
           f"{'copies':>7}  verdict")
-    for name, fn, fargs, expect in cases:
-        shape = flat.shape if fn is bare else ps
+    for name, fn, fargs, expect, shapes in cases:
         txt = fn.lower(*fargs).as_text()
-        found, aliased = _pool_alias(txt, shape)
         ncopy = _count_copies(fn, *fargs)
-        ok = (aliased > 0) == expect and found > 0
+        ok = True
+        found_t = aliased_t = 0
+        for shape in shapes:
+            found, aliased = _pool_alias(txt, shape)
+            found_t += found
+            aliased_t += aliased
+            ok = ok and (aliased > 0) == expect and found > 0
         verdict = "ok" if ok else "FAIL"
         if not ok:
             failures.append(name)
-        print(f"{name:44} {found:>8} {aliased:>8} "
+        print(f"{name:48} {found_t:>8} {aliased_t:>8} "
               f"{ncopy if ncopy >= 0 else 'n/a':>7}  {verdict}")
         if args.verbose:
             sig = txt.split("func.func public @main", 1)[-1]

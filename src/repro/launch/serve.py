@@ -22,6 +22,14 @@ Two-tier prefix cache on a shared-prefix trace (``cache_hit_rate`` and
     PYTHONPATH=src python -m repro.launch.serve --rps 20 --duration 40 \
         --prefix-cache on --prefix-share 0.5 --json
 
+Quantized KV tier — int8 blockwise pool, fused-dequant paged attention,
+half-cost rotation (``--hbm-budget-gb`` sizes the HBM tier by bytes so the
+same budget holds ~2x blocks under int8; ``block_bytes``/``d2h_bytes``/
+``h2d_bytes`` land in the output):
+
+    PYTHONPATH=src python -m repro.launch.serve --rps 20 --duration 40 \
+        --kv-dtype int8 --hbm-budget-gb 60 --paged-runner --json
+
 Disaggregated prefill/decode serving with cross-replica KV migration over
 the DRAM tier (``migrations``/``migration_*`` counters land in the output;
 best exercised under a bursty trace):
@@ -131,7 +139,21 @@ def main(argv=None):
                     help="prompt-length clamp under --paged-runner")
     ap.add_argument("--paged-max-output", type=int, default=8,
                     help="output-length clamp under --paged-runner")
+    ap.add_argument("--kv-dtype", choices=["bf16", "int8"], default="bf16",
+                    help="KV cache storage dtype. int8 selects the blockwise"
+                         "-quantized tier: the paged pool stores int8 rows + "
+                         "per-(block, layer, K/V, head) fp32 scales, paged "
+                         "attention dequantizes in-kernel, and rotation / "
+                         "migration over C2C move ~half the bytes per block "
+                         "(bf16, the default, is the bit-identical path)")
     ap.add_argument("--hbm-blocks", type=int, default=4000)
+    ap.add_argument("--hbm-budget-gb", type=float, default=None,
+                    metavar="GB",
+                    help="size the HBM tier by a KV byte budget instead of "
+                         "--hbm-blocks: block count = budget // block_bytes "
+                         "for the chosen --model / --kv-dtype (the capacity "
+                         "comparison knob: the same budget holds ~2x blocks "
+                         "under --kv-dtype int8)")
     ap.add_argument("--dram-blocks", type=int, default=100000)
     ap.add_argument("--alpha", type=float, default=3.0)
     ap.add_argument("--beta-b", type=float, default=0.0)
@@ -166,8 +188,14 @@ def main(argv=None):
     rot = RotaSchedConfig(alpha=args.alpha, beta_b=args.beta_b,
                           beta_f=args.beta_f,
                           b_xfer=args.b_xfer if args.b_xfer else 2400)
+    hbm_blocks = args.hbm_blocks
+    if args.hbm_budget_gb is not None:
+        from repro.core.duplexkv import hbm_block_capacity
+        hbm_blocks = hbm_block_capacity(
+            cfg, ServingConfig.block_size,
+            int(args.hbm_budget_gb * (1 << 30)), kv_dtype=args.kv_dtype)
     sv = ServingConfig(
-        num_hbm_blocks=args.hbm_blocks, num_dram_blocks=args.dram_blocks,
+        num_hbm_blocks=hbm_blocks, num_dram_blocks=args.dram_blocks,
         scheduler=args.scheduler, rotary=rot,
         auto_b_xfer=(args.b_xfer == 0),
         duplex=not args.no_duplex, eager_rotation=not args.no_eager,
@@ -176,7 +204,8 @@ def main(argv=None):
         pipeline_overlap=not args.no_pipeline,
         pipeline=args.pipeline,
         prefix_cache=(args.prefix_cache == "on"),
-        paged_runner=args.paged_runner, tp=args.tp)
+        paged_runner=args.paged_runner, tp=args.tp,
+        kv_dtype=args.kv_dtype)
     hw = HW_PROFILES[args.hw]
     arrival_kw = (dict(burst_on=args.burst_on, burst_off=args.burst_off,
                        burst_factor=args.burst_factor)
@@ -263,12 +292,19 @@ def main(argv=None):
         cores = router.replicas
     else:
         cores = [eng.core]
+    # capacity + rotation byte accounting: what the quantized tier halves.
+    # block_bytes is dtype-aware (int8 rows + per-block scales), and the
+    # d2h/h2d byte counters are what the C2C link actually carried — the
+    # CI int8 smoke asserts both against a bf16 run of the same budget
+    tc = [c.kv.transfer_counters() for c in cores]
+    row.update(kv_dtype=args.kv_dtype,
+               hbm_blocks=hbm_blocks,
+               block_bytes=cores[0].kv.block_bytes,
+               d2h_bytes=sum(t["d2h_bytes"] for t in tc),
+               h2d_bytes=sum(t["h2d_bytes"] for t in tc))
     if args.tp > 1:
         # per-shard link accounting: what ONE chip's C2C actually carried
-        tc = [c.kv.transfer_counters() for c in cores]
         row.update(tp=args.tp, kv_shards=tc[0]["kv_shards"],
-                   d2h_bytes=sum(t["d2h_bytes"] for t in tc),
-                   h2d_bytes=sum(t["h2d_bytes"] for t in tc),
                    d2h_bytes_per_shard=sum(t["d2h_bytes_per_shard"]
                                            for t in tc),
                    h2d_bytes_per_shard=sum(t["h2d_bytes_per_shard"]

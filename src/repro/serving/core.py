@@ -246,9 +246,11 @@ class EngineCore:
         #    * default: pure SimExecutor (tokens are oracle counts).
         self.real = real_executor
         tp = int(getattr(serving, "tp", 1) or 1)
+        kvd = getattr(serving, "kv_dtype", "bf16")
         if real_executor is not None:
             self.executor: Executor = RealExecutorAdapter(
-                real_executor, executor or SimExecutor(cfg, hw, tp=tp))
+                real_executor, executor or SimExecutor(cfg, hw, tp=tp,
+                                                       kv_dtype=kvd))
         elif executor is not None:
             self.executor = executor
         elif serving.paged_runner:
@@ -257,7 +259,7 @@ class EngineCore:
                 runner_cfg or cfg, serving, hw, seed=runner_seed,
                 timing_cfg=cfg)
         else:
-            self.executor = SimExecutor(cfg, hw, tp=tp)
+            self.executor = SimExecutor(cfg, hw, tp=tp, kv_dtype=kvd)
         self.kv = DuplexKV(cfg, serving, hw)
         if hasattr(self.executor, "bind"):
             self.executor.bind(self.kv)   # pool-backed executors attach here

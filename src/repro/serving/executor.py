@@ -125,7 +125,8 @@ class Executor:
 
 class SimExecutor(Executor):
     def __init__(self, cfg: ModelConfig, hw: HardwareProfile,
-                 fixed_overhead_s: float = 0.004, tp: int = 1):
+                 fixed_overhead_s: float = 0.004, tp: int = 1,
+                 kv_dtype: str = "bf16"):
         self.cfg = cfg
         self.hw = hw
         self.fixed = fixed_overhead_s
@@ -136,7 +137,11 @@ class SimExecutor(Executor):
         self.tp = max(int(tp), 1)
         self.n_active = cfg.active_param_count()
         self.weight_bytes = cfg.param_count() * 2
-        self.kv_per_token = cfg.kv_bytes_per_token()
+        # decode's HBM read per context token: int8 KV tier halves it (the
+        # per-block fp32 scale rows are noise next to P·D int8 values and
+        # are not amortizable here — step_time sees tokens, not blocks)
+        self.kv_per_token = cfg.kv_bytes_per_token(
+            dtype_bytes=1 if kv_dtype == "int8" else None)
 
     def step_time(self, plan: BatchPlan) -> float:
         if plan.empty:

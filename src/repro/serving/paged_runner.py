@@ -70,7 +70,8 @@ class PagedKVStore:
 
     def __init__(self, cfg: ModelConfig, serving: ServingConfig, dtype,
                  *, staging: int = 64, interpret: bool = True,
-                 double_buffer: bool = False, tp_plan=None, mesh=None):
+                 double_buffer: bool = False, tp_plan=None, mesh=None,
+                 kv_dtype: str = "bf16"):
         import jax
         import jax.numpy as jnp
         if staging < 1 or staging & (staging - 1):
@@ -107,6 +108,22 @@ class PagedKVStore:
             self.d2h_chunk = staging
         self.row_shape = (L, 2, P, cfg.num_kv_heads, cfg.head_dim)
         pool_shape = (self.nb + staging + 1,) + self.row_shape
+        # Quantized tier (serving.kv_dtype == "int8"): the pool stores int8
+        # values and a parallel fp32 scale array — one scale per (row,
+        # layer, K/V side, kv head) — rides every row-movement path with
+        # the SAME slot indexing (staging, double-buffer, host tier, D2D).
+        self.quantized = kv_dtype == "int8"
+        if kv_dtype not in ("bf16", "int8"):
+            raise ValueError(f"kv_dtype must be 'bf16' or 'int8', "
+                             f"got {kv_dtype!r}")
+        if self.quantized:
+            from repro.kernels.quant import kv_scale_shape
+            dtype = jnp.int8
+            self.scale_row_shape = kv_scale_shape(self.row_shape)
+            scale_shape = (pool_shape[0],) + self.scale_row_shape
+        else:
+            self.scale_row_shape = None
+            scale_shape = None
         # Tensor parallelism: the kv-head dim shards over the ("model",)
         # mesh — pool rows keep their GLOBAL slot numbering (the row dim is
         # never sharded), so the block table and every transfer descriptor
@@ -114,16 +131,25 @@ class PagedKVStore:
         # stays bit-identical (plain single-device pool, unwrapped jits).
         self.tp_plan = tp_plan
         self.mesh = mesh
+        self.scales = None
         if mesh is not None:
             from jax.sharding import NamedSharding
-            from repro.distributed.tp import pool_pspec
+            from repro.distributed.tp import pool_pspec, scale_pspec
             self._pool_spec = pool_pspec(tp_plan)
             sharding = NamedSharding(mesh, self._pool_spec)
             self.pool = jnp.zeros(pool_shape, dtype, device=sharding)
+            self._scale_spec = scale_pspec(tp_plan)
+            if self.quantized:
+                self.scales = jnp.zeros(
+                    scale_shape, jnp.float32,
+                    device=NamedSharding(mesh, self._scale_spec))
         else:
-            self._pool_spec = None
+            self._pool_spec = self._scale_spec = None
             self.pool = jnp.zeros(pool_shape, dtype)
-        self.host: Dict[int, np.ndarray] = {}      # dram_slot -> row array
+            if self.quantized:
+                self.scales = jnp.zeros(scale_shape, jnp.float32)
+        # dram_slot -> row array (bf16) | (int8 row, fp32 scale row) tuple
+        self.host: Dict[int, np.ndarray] = {}
         self.interpret = interpret
         # counters (benchmarks / tests)
         self.copy_launches = 0
@@ -146,10 +172,31 @@ class PagedKVStore:
             return jax.lax.dynamic_update_slice(pool, rows.astype(pool.dtype),
                                                 idx)
 
+        # Quantized variants move the scale array through the SAME batched
+        # launch / staging path as the int8 rows — a scale row is part of
+        # the block's payload, so every direction (D2D fork, D2H gather,
+        # H2D scatter) carries both or the dequant would read stale scales.
+        def _copy_q(pool, scales, src, dst):
+            flat = pool.reshape(pool.shape[0], -1)
+            out = kv_copy_tpu(flat, src, dst, interpret=interpret)
+            sflat = scales.reshape(scales.shape[0], -1)
+            sout = kv_copy_tpu(sflat, src, dst, interpret=interpret)
+            return out.reshape(pool.shape), sout.reshape(scales.shape)
+
+        def _upload_q(pool, scales, rows, srows, base):
+            idx = (base,) + (0,) * (pool.ndim - 1)
+            pool = jax.lax.dynamic_update_slice(pool, rows.astype(pool.dtype),
+                                                idx)
+            sidx = (base,) + (0,) * (scales.ndim - 1)
+            scales = jax.lax.dynamic_update_slice(
+                scales, srows.astype(scales.dtype), sidx)
+            return pool, scales
+
         if mesh is not None:
             from jax.experimental.shard_map import shard_map
             from jax.sharding import PartitionSpec as Pspec
             ps = self._pool_spec
+            ss = self._scale_spec
             # check_rep=False: pallas calls inside shard_map can't prove
             # replication; correctness is covered by the tp parity tests
             _copy = shard_map(_copy, mesh=mesh,
@@ -158,6 +205,12 @@ class PagedKVStore:
             _upload = shard_map(_upload, mesh=mesh,
                                 in_specs=(ps, ps, Pspec()),
                                 out_specs=ps, check_rep=False)
+            _copy_q = shard_map(_copy_q, mesh=mesh,
+                                in_specs=(ps, ss, Pspec(), Pspec()),
+                                out_specs=(ps, ss), check_rep=False)
+            _upload_q = shard_map(_upload_q, mesh=mesh,
+                                  in_specs=(ps, ss, ps, ss, Pspec()),
+                                  out_specs=(ps, ss), check_rep=False)
 
         # donate the pool: the caller always rebinds to the returned array,
         # and without donation every launch would deep-copy the whole pool,
@@ -167,16 +220,27 @@ class PagedKVStore:
         # launch/audit_donation.py)
         self._jit_copy = jax.jit(_copy, donate_argnums=(0,))
         self._jit_upload = jax.jit(_upload, donate_argnums=(0,))
+        if self.quantized:
+            # the scale array is donated too: half-row-sized, same rebinding
+            self._jit_copy_q = jax.jit(_copy_q, donate_argnums=(0, 1))
+            self._jit_upload_q = jax.jit(_upload_q, donate_argnums=(0, 1))
 
     @property
     def pool_shard_bytes(self) -> int:
         """Bytes ONE device holds: global/kv_shards when the kv-head dim is
-        sharded, the full pool when replicated or single-chip."""
-        return self.pool.addressable_shards[0].data.nbytes
+        sharded, the full pool when replicated or single-chip. Includes the
+        scale array in quantized mode — it is part of the KV footprint."""
+        n = self.pool.addressable_shards[0].data.nbytes
+        if self.quantized:
+            n += self.scales.addressable_shards[0].data.nbytes
+        return n
 
     @property
     def pool_global_bytes(self) -> int:
-        return self.pool.nbytes
+        n = self.pool.nbytes
+        if self.quantized:
+            n += self.scales.nbytes
+        return n
 
     def _copy_rows(self, src: Sequence[int], dst: Sequence[int]) -> None:
         """One batched row-copy launch: pool[dst[i]] = pool[src[i]].
@@ -187,7 +251,12 @@ class PagedKVStore:
         s = np.full(np2, -1, np.int32)
         d = np.zeros(np2, np.int32)
         s[:n], d[:n] = src, dst
-        self.pool = self._jit_copy(self.pool, jnp.asarray(s), jnp.asarray(d))
+        if self.quantized:
+            self.pool, self.scales = self._jit_copy_q(
+                self.pool, self.scales, jnp.asarray(s), jnp.asarray(d))
+        else:
+            self.pool = self._jit_copy(self.pool, jnp.asarray(s),
+                                       jnp.asarray(d))
         self.copy_launches += 1
 
     # -- DuplexKV data-backend protocol ------------------------------------
@@ -204,8 +273,16 @@ class PagedKVStore:
         chunk so the next gather launch is already in the dispatch queue."""
         n = len(chunk)
         data = np.asarray(self.pool[base:base + n])
-        for j, d in enumerate(chunk):
-            self.host[d.dst_slot] = np.array(data[j])
+        if self.quantized:
+            # the host tier stores (int8 row, fp32 scale row) — the D2H
+            # transfer the DuplexKV timed is the ~half-size int8 payload
+            sdata = np.asarray(self.scales[base:base + n])
+            for j, d in enumerate(chunk):
+                self.host[d.dst_slot] = (np.array(data[j]),
+                                         np.array(sdata[j]))
+        else:
+            for j, d in enumerate(chunk):
+                self.host[d.dst_slot] = np.array(data[j])
         self.d2h_rows += n
 
     def run_d2h(self, descs) -> None:
@@ -247,10 +324,22 @@ class PagedKVStore:
                         f"{d.src_slot} holds no data (lost copy)")
                 rows.append(row)
             np2 = _pow2(n)
-            buf = np.zeros((np2,) + self.row_shape, rows[0].dtype)
-            buf[:n] = np.stack(rows)
-            self.pool = self._jit_upload(self.pool, jnp.asarray(buf),
-                                         jnp.asarray(self.h2d_base, np.int32))
+            if self.quantized:
+                vals = [r[0] for r in rows]
+                srows = [r[1] for r in rows]
+                buf = np.zeros((np2,) + self.row_shape, vals[0].dtype)
+                buf[:n] = np.stack(vals)
+                sbuf = np.zeros((np2,) + self.scale_row_shape, np.float32)
+                sbuf[:n] = np.stack(srows)
+                self.pool, self.scales = self._jit_upload_q(
+                    self.pool, self.scales, jnp.asarray(buf),
+                    jnp.asarray(sbuf), jnp.asarray(self.h2d_base, np.int32))
+            else:
+                buf = np.zeros((np2,) + self.row_shape, rows[0].dtype)
+                buf[:n] = np.stack(rows)
+                self.pool = self._jit_upload(
+                    self.pool, jnp.asarray(buf),
+                    jnp.asarray(self.h2d_base, np.int32))
             self._copy_rows(list(range(self.h2d_base, self.h2d_base + n)),
                             [d.dst_slot for d in chunk])
             self.h2d_rows += n
@@ -296,10 +385,16 @@ class PagedModelRunner(Executor):
         self.cfg = model_cfg
         self.serving = serving
         self.tp = int(getattr(serving, "tp", 1) or 1)
+        # Quantized KV tier: kv_dtype == "int8" switches the runner to the
+        # *_impl_q jit functions below. The bf16 path keeps its own impls
+        # and jit call structure, so the default jaxpr (and the golden
+        # replay) is byte-identical to the unquantized runner.
+        self.kv_dtype = getattr(serving, "kv_dtype", "bf16") or "bf16"
+        self.quantized = self.kv_dtype == "int8"
         from repro.distributed.tp import plan_tp_sharding
         self.tp_plan = plan_tp_sharding(model_cfg, self.tp)
         self.sim = sim or SimExecutor(timing_cfg or model_cfg, hw,
-                                      tp=self.tp)
+                                      tp=self.tp, kv_dtype=self.kv_dtype)
         self.interpret = interpret
         self.dtype = dtype_of(model_cfg.dtype)
         self.lm = LM(model_cfg)
@@ -318,16 +413,24 @@ class PagedModelRunner(Executor):
         self._psum_mlp = self.tp_plan.shard_mlp
         if self.tp_plan.trivial:
             self.mesh = None
-            # pool (arg 2 after layers/head) donated: rebound on every return
-            self._jit_decode = jax.jit(self._decode_impl, donate_argnums=(2,))
-            self._jit_prefill = jax.jit(self._prefill_impl,
-                                        donate_argnums=(2,))
+            if self.quantized:
+                # pool + scales (args 2, 3) donated: rebound on every return
+                self._jit_decode = jax.jit(self._decode_impl_q,
+                                           donate_argnums=(2, 3))
+                self._jit_prefill = jax.jit(self._prefill_impl_q,
+                                            donate_argnums=(2, 3))
+            else:
+                # pool (arg 2 after layers/head) donated: rebound every return
+                self._jit_decode = jax.jit(self._decode_impl,
+                                           donate_argnums=(2,))
+                self._jit_prefill = jax.jit(self._prefill_impl,
+                                            donate_argnums=(2,))
         else:
             from jax.experimental.shard_map import shard_map
             from jax.sharding import NamedSharding
             from jax.sharding import PartitionSpec as Pspec
             from repro.distributed.tp import (head_pspecs, layer_pspecs,
-                                              pool_pspec)
+                                              pool_pspec, scale_pspec)
             from repro.launch.mesh import make_tp_mesh
             self.mesh = make_tp_mesh(self.tp)   # raises with the XLA_FLAGS
             #                                     recipe if devices are short
@@ -343,18 +446,33 @@ class PagedModelRunner(Executor):
                 k: jax.device_put(v, NamedSharding(self.mesh, head_specs[k]))
                 for k, v in self._head.items()}
             ps = pool_pspec(self.tp_plan)
-            dec = shard_map(
-                self._decode_impl, mesh=self.mesh,
-                in_specs=(layer_specs, head_specs, ps,
-                          Pspec(), Pspec(), Pspec()),
-                out_specs=(ps, Pspec()), check_rep=False)
-            pre = shard_map(
-                self._prefill_impl, mesh=self.mesh,
-                in_specs=(layer_specs, head_specs, ps,
-                          Pspec(), Pspec(), Pspec(), Pspec()),
-                out_specs=(ps, Pspec()), check_rep=False)
-            self._jit_decode = jax.jit(dec, donate_argnums=(2,))
-            self._jit_prefill = jax.jit(pre, donate_argnums=(2,))
+            if self.quantized:
+                ss = scale_pspec(self.tp_plan)
+                dec = shard_map(
+                    self._decode_impl_q, mesh=self.mesh,
+                    in_specs=(layer_specs, head_specs, ps, ss,
+                              Pspec(), Pspec(), Pspec()),
+                    out_specs=(ps, ss, Pspec()), check_rep=False)
+                pre = shard_map(
+                    self._prefill_impl_q, mesh=self.mesh,
+                    in_specs=(layer_specs, head_specs, ps, ss,
+                              Pspec(), Pspec(), Pspec(), Pspec()),
+                    out_specs=(ps, ss, Pspec()), check_rep=False)
+                self._jit_decode = jax.jit(dec, donate_argnums=(2, 3))
+                self._jit_prefill = jax.jit(pre, donate_argnums=(2, 3))
+            else:
+                dec = shard_map(
+                    self._decode_impl, mesh=self.mesh,
+                    in_specs=(layer_specs, head_specs, ps,
+                              Pspec(), Pspec(), Pspec()),
+                    out_specs=(ps, Pspec()), check_rep=False)
+                pre = shard_map(
+                    self._prefill_impl, mesh=self.mesh,
+                    in_specs=(layer_specs, head_specs, ps,
+                              Pspec(), Pspec(), Pspec(), Pspec()),
+                    out_specs=(ps, Pspec()), check_rep=False)
+                self._jit_decode = jax.jit(dec, donate_argnums=(2,))
+                self._jit_prefill = jax.jit(pre, donate_argnums=(2,))
         # counters (benchmarks / tests): decode launch count is per-layer,
         # INDEPENDENT of batch size — the whole point of the batched path
         self.decode_batches = 0
@@ -371,7 +489,7 @@ class PagedModelRunner(Executor):
             self.cfg, self.serving, self.dtype, interpret=self.interpret,
             double_buffer=bool(getattr(self.serving, "pipeline", False)),
             tp_plan=None if self.tp_plan.trivial else self.tp_plan,
-            mesh=self.mesh)
+            mesh=self.mesh, kv_dtype=self.kv_dtype)
         kv.attach_data_backend(self.store)
 
     def _flatten_layers(self) -> List[dict]:
@@ -502,10 +620,16 @@ class PagedModelRunner(Executor):
         ids_p[:take] = ids
         rows_p = np.full(mbp, self.store.trash_row, np.int32)
         rows_p[:min(len(rows), mbp)] = rows[:mbp]
-        self.store.pool, tok = self._jit_prefill(
-            self._layers, self._head, self.store.pool,
-            jnp.asarray(ids_p), jnp.asarray(start, jnp.int32),
-            jnp.asarray(take, jnp.int32), jnp.asarray(rows_p))
+        if self.quantized:
+            self.store.pool, self.store.scales, tok = self._jit_prefill(
+                self._layers, self._head, self.store.pool, self.store.scales,
+                jnp.asarray(ids_p), jnp.asarray(start, jnp.int32),
+                jnp.asarray(take, jnp.int32), jnp.asarray(rows_p))
+        else:
+            self.store.pool, tok = self._jit_prefill(
+                self._layers, self._head, self.store.pool,
+                jnp.asarray(ids_p), jnp.asarray(start, jnp.int32),
+                jnp.asarray(take, jnp.int32), jnp.asarray(rows_p))
         self.prefill_chunks_run += 1
         if start + take >= r.prompt_len and r.tokens_generated == 0:
             return tok if defer else int(tok)   # defer: device array, no sync
@@ -531,9 +655,14 @@ class PagedModelRunner(Executor):
             cl_p[i] = cls[i]
             k = min(len(rows[i]), mbp)
             bt[i, :k] = rows[i][:k]
-        self.store.pool, nxt = self._jit_decode(
-            self._layers, self._head, self.store.pool,
-            jnp.asarray(toks), jnp.asarray(bt), jnp.asarray(cl_p))
+        if self.quantized:
+            self.store.pool, self.store.scales, nxt = self._jit_decode(
+                self._layers, self._head, self.store.pool, self.store.scales,
+                jnp.asarray(toks), jnp.asarray(bt), jnp.asarray(cl_p))
+        else:
+            self.store.pool, nxt = self._jit_decode(
+                self._layers, self._head, self.store.pool,
+                jnp.asarray(toks), jnp.asarray(bt), jnp.asarray(cl_p))
         self.decode_batches += 1
         self.decode_tokens += len(dec)
         self.attn_launches += len(self._layers)
@@ -651,3 +780,110 @@ class PagedModelRunner(Executor):
                                               keepdims=False)
         logits = self._logits(head, h_last)
         return pool, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    # ------------------------------------------------- quantized (int8) path
+    # Separate impls (not a flag inside _decode_impl/_prefill_impl) so the
+    # bf16 jaxpr — and with it the golden replay — stays byte-identical when
+    # kv_dtype == "bf16". HBM traffic in this path is int8: the K/V scatter
+    # writes quantized rows (running per-block scales, see kernels/quant.py)
+    # and paged_attention_tpu dequantizes INSIDE the kernel (scales ride a
+    # side ref through the same block-table indirection), so decode reads
+    # ~half the bytes per block.
+
+    def _decode_impl_q(self, layers, head, pool, scales, toks, bt, cl):
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels.paged_attention import paged_attention_tpu
+        from repro.kernels.quant import quant_store_tokens
+        from repro.models.common import apply_rope, rms_norm, swiglu
+        cfg = self.cfg
+        P = self.serving.block_size
+        MB = bt.shape[1]
+        x = jnp.take(head["embed"], toks, axis=0)            # (B, d)
+        pos = cl[:, None]                                    # (B, 1)
+        blk = jnp.clip(cl // P, 0, MB - 1)
+        wrow = jnp.take_along_axis(bt, blk[:, None], axis=1)[:, 0]
+        woff = cl % P
+        for li, p in enumerate(layers):
+            h = rms_norm(x[:, None], p["ln1"], cfg.rms_eps)  # (B, 1, d)
+            q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+            lrow = jnp.full_like(wrow, li)
+            pool, scales = quant_store_tokens(pool, scales, wrow, lrow, 0,
+                                              woff, k[:, 0])
+            pool, scales = quant_store_tokens(pool, scales, wrow, lrow, 1,
+                                              woff, v[:, 0])
+            out = paged_attention_tpu(q[:, 0], pool, bt, cl + 1, layer=li,
+                                      kv_scales=scales,
+                                      interpret=self.interpret)
+            attn = jnp.einsum("bhk,hkd->bd", out, p["wo"])
+            if self._psum_attn:   # partial over this shard's kv-head groups
+                attn = jax.lax.psum(attn, "model")
+            x = x + attn
+            h2 = rms_norm(x[:, None], p["ln2"], cfg.rms_eps)
+            mlp = swiglu(h2, p["w_gate"], p["w_up"], p["w_down"])[:, 0]
+            if self._psum_mlp:    # partial over this shard's d_ff slice
+                mlp = jax.lax.psum(mlp, "model")
+            x = x + mlp
+        logits = self._logits(head, x)
+        return pool, scales, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _prefill_impl_q(self, layers, head, pool, scales, ids, start,
+                        nvalid, bt):
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels.quant import quant_store_tokens
+        from repro.models.attention import flash_attention
+        from repro.models.common import apply_rope, rms_norm, swiglu
+        cfg = self.cfg
+        P = self.serving.block_size
+        T = ids.shape[0]
+        MB = bt.shape[0]
+        x = jnp.take(head["embed"], ids, axis=0)[None]       # (1, T, d)
+        tpos = start + jnp.arange(T)
+        positions = tpos[None]
+        valid = jnp.arange(T) < nvalid
+        blk = jnp.clip(tpos // P, 0, MB - 1)
+        wrow = jnp.where(valid, bt[blk], self.store.trash_row)
+        woff = tpos % P
+        for li, p in enumerate(layers):
+            h = rms_norm(x, p["ln1"], cfg.rms_eps)
+            q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            lrow = jnp.full_like(wrow, li)
+            pool, scales = quant_store_tokens(pool, scales, wrow, lrow, 0,
+                                              woff, k[0])
+            pool, scales = quant_store_tokens(pool, scales, wrow, lrow, 1,
+                                              woff, v[0])
+            # context gather dequantizes explicitly (prefill attends via
+            # flash_attention over a dense gathered context, not the paged
+            # kernel); local kv-head count comes from the (possibly sharded)
+            # pool shape
+            hkv, hd = pool.shape[-2], pool.shape[-1]
+            k_ctx = (pool[bt, li, 0].astype(jnp.float32)
+                     * scales[bt, li, 0][:, None, :, None]
+                     ).reshape(1, MB * P, hkv, hd).astype(k.dtype)
+            v_ctx = (pool[bt, li, 1].astype(jnp.float32)
+                     * scales[bt, li, 1][:, None, :, None]
+                     ).reshape(1, MB * P, hkv, hd).astype(v.dtype)
+            out = flash_attention(q, k_ctx, v_ctx, causal=True,
+                                  q_offset=start)
+            attn = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+            if self._psum_attn:
+                attn = jax.lax.psum(attn, "model")
+            x = x + attn
+            h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+            mlp = swiglu(h2, p["w_gate"], p["w_up"], p["w_down"])
+            if self._psum_mlp:
+                mlp = jax.lax.psum(mlp, "model")
+            x = x + mlp
+        h_last = jax.lax.dynamic_index_in_dim(x[0], nvalid - 1, axis=0,
+                                              keepdims=False)
+        logits = self._logits(head, h_last)
+        return pool, scales, jnp.argmax(logits, axis=-1).astype(jnp.int32)

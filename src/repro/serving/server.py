@@ -3,8 +3,12 @@
 No third-party dependencies: ``asyncio.start_server`` + hand-rolled request
 parsing, chunked transfer encoding for streams. One request per connection
 (``Connection: close``) by default; GET probe endpoints (``/healthz``,
-``/readyz``, ``/v1/metrics``) honor an explicit ``Connection: keep-alive``
-request header so monitoring loops reuse one socket. Endpoints:
+``/readyz``, ``/v1/metrics``) and ``POST /v1/generate`` honor an explicit
+``Connection: keep-alive`` request header — probes reuse trivially, and a
+generate stream that ends cleanly (terminal chunk delivered) leaves the
+socket open for the client's next request, dropping the per-request TCP
+handshake from steady-state load generators. Disconnects, errors, and
+clients that never ask still get the one-shot behaviour. Endpoints:
 
 * ``POST /v1/generate`` — JSON in, SSE-style chunked stream out. Body::
 
@@ -83,6 +87,7 @@ class ServerConfig:
     prefix_cache: bool = False
     paged_runner: bool = False        # real reduced-model execution
     tp: int = 1                       # tensor parallelism (devices/replica)
+    kv_dtype: str = "bf16"            # "int8" = quantized KV tier
     hbm_blocks: int = 4000
     dram_blocks: int = 100000
     drain_timeout: float = 15.0       # wall seconds for graceful drain
@@ -117,6 +122,9 @@ class ServerConfig:
             problems.append("replicas must be >= 1")
         if self.tp < 1:
             problems.append("tp must be >= 1")
+        if self.kv_dtype not in ("bf16", "int8"):
+            problems.append(f"kv_dtype must be 'bf16' or 'int8', "
+                            f"got {self.kv_dtype!r}")
         if self.prefill_replicas < 1 or self.decode_replicas < 1:
             problems.append("prefill/decode replicas must be >= 1")
         if self.hbm_blocks < 1 or self.dram_blocks < 1:
@@ -163,7 +171,8 @@ class ServerConfig:
                            pipeline=self.pipeline,
                            prefix_cache=self.prefix_cache,
                            paged_runner=self.paged_runner,
-                           tp=self.tp)
+                           tp=self.tp,
+                           kv_dtype=self.kv_dtype)
         hw = HW_PROFILES[self.hw]
         runner_cfg = None
         if self.paged_runner:   # real execution: reduced fp32 model on CPU
@@ -266,10 +275,14 @@ def _json_response(writer: asyncio.StreamWriter, status: int,
         "Connection": "keep-alive" if keep_alive else "close"}) + body)
 
 
-# GET probes that may reuse the connection (explicit opt-in only: clients
-# that never send ``Connection: keep-alive`` see the original one-shot
-# behaviour, response header included)
+# Paths that may reuse the connection (explicit opt-in only: clients that
+# never send ``Connection: keep-alive`` see the original one-shot
+# behaviour, response header included). GET probes reuse trivially;
+# ``POST /v1/generate`` reuses after a CLEAN stream end (terminal chunk
+# delivered) — bytes of a pipelined next request that the disconnect
+# watcher swallowed mid-stream are pushed back before the next parse.
 _KEEPALIVE_PATHS = frozenset({"/healthz", "/readyz", "/v1/metrics"})
+_KEEPALIVE_POST_PATHS = frozenset({"/v1/generate"})
 
 
 def _chunk(data: bytes) -> bytes:
@@ -284,13 +297,32 @@ class ClientDisconnected(Exception):
     pass
 
 
-async def _watch_eof(reader: asyncio.StreamReader) -> None:
+async def _watch_eof(reader: asyncio.StreamReader,
+                     stash: Optional[bytearray] = None) -> None:
     """Resolve when the client half-closes its socket (disconnect signal
-    during streaming; stray bytes from a misbehaving client are ignored)."""
+    during streaming). Consumed bytes go into ``stash`` when given — a
+    kept-alive client may legally pipeline its next request while the
+    stream is still running, and those bytes must survive the watch."""
     while True:
         data = await reader.read(4096)
         if not data:
             return
+        if stash is not None:
+            stash.extend(data)
+
+
+def _unread(reader: asyncio.StreamReader, data: bytes) -> bool:
+    """Push consumed bytes back to the FRONT of the reader's buffer (they
+    arrived before anything still buffered). Touches a private CPython
+    attribute by necessity — returns False (caller closes instead of
+    reusing) if the implementation doesn't expose it."""
+    if not data:
+        return True
+    buf = getattr(reader, "_buffer", None)
+    if not isinstance(buf, bytearray):
+        return False
+    buf[:0] = data
+    return True
 
 
 # --------------------------------------------------------------------- server
@@ -391,12 +423,14 @@ class InferenceServer:
                     return
                 method, path, headers, body = req
                 self.http_requests += 1
-                keep = (method == "GET" and path in _KEEPALIVE_PATHS
-                        and headers.get("connection", "").lower()
-                        == "keep-alive")
+                wants_keep = (headers.get("connection", "").lower()
+                              == "keep-alive")
+                keep = wants_keep and (
+                    (method == "GET" and path in _KEEPALIVE_PATHS)
+                    or (method == "POST" and path in _KEEPALIVE_POST_PATHS))
                 try:
-                    await self._dispatch(method, path, body, reader, writer,
-                                         keep_alive=keep)
+                    keep = await self._dispatch(method, path, body, reader,
+                                                writer, keep_alive=keep)
                 except HttpError as e:
                     _json_response(writer, e.status, {"error": e.message})
                     keep = False           # error responses always close
@@ -421,7 +455,9 @@ class InferenceServer:
     async def _dispatch(self, method: str, path: str, body: bytes,
                         reader: asyncio.StreamReader,
                         writer: asyncio.StreamWriter, *,
-                        keep_alive: bool = False) -> None:
+                        keep_alive: bool = False) -> bool:
+        """Route one request; returns whether the connection may be reused
+        (``_generate`` can demote an approved keep-alive mid-stream)."""
         if path == "/healthz":
             if method != "GET":
                 raise HttpError(405, "use GET")
@@ -449,9 +485,11 @@ class InferenceServer:
         elif path == "/v1/generate":
             if method != "POST":
                 raise HttpError(405, "use POST")
-            await self._generate(body, reader, writer)
+            return await self._generate(body, reader, writer,
+                                        keep_alive=keep_alive)
         else:
             raise HttpError(404, f"no route for {path}")
+        return keep_alive
 
     async def _metrics(self, writer: asyncio.StreamWriter, *,
                        keep_alive: bool = False) -> None:
@@ -507,7 +545,11 @@ class InferenceServer:
                                   else None))
 
     async def _generate(self, body: bytes, reader: asyncio.StreamReader,
-                        writer: asyncio.StreamWriter) -> None:
+                        writer: asyncio.StreamWriter, *,
+                        keep_alive: bool = False) -> bool:
+        """Stream one generation; returns True when the connection may be
+        reused (keep-alive requested AND the stream ended with its terminal
+        chunk delivered — disconnects and errors always close)."""
         if self._draining:
             raise HttpError(503, "draining: not admitting new requests")
         kw = self._parse_generate(body)
@@ -526,8 +568,9 @@ class InferenceServer:
             "Content-Type": "text/event-stream",
             "Transfer-Encoding": "chunked",
             "Cache-Control": "no-store",
-            "Connection": "close"}))
-        eof = asyncio.ensure_future(_watch_eof(reader))
+            "Connection": "keep-alive" if keep_alive else "close"}))
+        stash = bytearray() if keep_alive else None
+        eof = asyncio.ensure_future(_watch_eof(reader, stash))
         stream = handle.stream()
         try:
             while True:
@@ -564,6 +607,11 @@ class InferenceServer:
             eof.cancel()
             await asyncio.gather(eof, return_exceptions=True)
             await stream.aclose()
+        if not keep_alive:
+            return False
+        # clean stream end: hand back any next-request bytes the watcher
+        # consumed so the connection loop can parse them
+        return _unread(reader, bytes(stash))
 
 
 # ----------------------------------------------------------------- entrypoint

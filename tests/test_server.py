@@ -234,6 +234,69 @@ def test_probe_keepalive_reuses_one_socket():
     assert sut.stop() == 0
 
 
+def test_generate_keepalive_reuses_one_socket():
+    """``POST /v1/generate`` with ``Connection: keep-alive``: two complete
+    streams ride ONE socket — the server answers with a keep-alive header,
+    ends each stream at its terminal chunk, and parses the next request
+    from the same connection (including one pipelined mid-stream, whose
+    bytes the disconnect watcher must hand back)."""
+
+    def send_generate(s, max_tokens, keep=True):
+        payload = json.dumps({"prompt_len": 24,
+                              "max_tokens": max_tokens}).encode()
+        conn = "keep-alive" if keep else "close"
+        s.sendall((f"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                   f"Connection: {conn}\r\n"
+                   f"Content-Length: {len(payload)}\r\n\r\n").encode()
+                  + payload)
+
+    def recv_stream(s, buf):
+        """Read one chunked SSE stream through its terminal chunk; returns
+        (events, header bytes, leftover buffer)."""
+        while b"\r\n\r\n" not in buf:
+            chunk = s.recv(65536)
+            assert chunk, "server closed before response head"
+            buf += chunk
+        head, _, buf = buf.partition(b"\r\n\r\n")
+        while (k := buf.find(b"0\r\n\r\n")) == -1:
+            chunk = s.recv(65536)
+            assert chunk, "server closed before terminal chunk"
+            buf += chunk
+        body, buf = buf[:k], buf[k + 5:]
+        return parse_events(body), head, buf
+
+    with ServerUnderTest(pace=False) as sut:
+        with socket.create_connection(("127.0.0.1", sut.port),
+                                      timeout=60.0) as s:
+            buf = b""
+            send_generate(s, 4)
+            # pipeline the second request while the first stream runs: its
+            # bytes may be swallowed by the disconnect watcher and must be
+            # pushed back for the next parse
+            send_generate(s, 6)
+            evts1, head1, buf = recv_stream(s, buf)
+            assert b"Connection: keep-alive" in head1
+            assert evts1[-1]["finished"]
+            assert evts1[-1]["tokens_generated"] == 4
+            evts2, head2, buf = recv_stream(s, buf)
+            assert evts2[-1]["finished"]
+            assert evts2[-1]["tokens_generated"] == 6
+            assert evts2[-1]["req_id"] != evts1[-1]["req_id"]
+            # third exchange without the header: one-shot semantics
+            send_generate(s, 3, keep=False)
+            while b"0\r\n\r\n" not in buf:
+                chunk = s.recv(65536)
+                if not chunk:
+                    break
+                buf += chunk
+            head3, _, body3 = buf.partition(b"\r\n\r\n")
+            assert b"Connection: close" in head3
+            assert parse_events(body3)[-1]["finished"]
+            assert s.recv(65536) == b""          # server closed its end
+        assert sut.server.streams_started == 3
+    assert sut.stop() == 0
+
+
 def test_concurrent_clients():
     n = 8
     with ServerUnderTest(pace=False, replicas=2, pipeline=True) as sut:
