@@ -426,6 +426,13 @@ class ServingConfig:
     # (quality guarded by tolerance tests, not bit-parity). See DESIGN.md
     # §Quantized KV tier.
     kv_dtype: str = "bf16"
+    # Flight recorder: bounded ring-buffer telemetry bus on every EngineCore
+    # (request lifecycle spans + per-iteration engine events, sim-clock
+    # stamped; exported as a Perfetto trace). Default off: no bus is
+    # allocated and the step loop takes the exact golden-replay code path.
+    # See DESIGN.md §Observability.
+    telemetry: bool = False
+    telemetry_buffer: int = 65536         # ring capacity (spans and events each)
 
     def __post_init__(self):
         if self.kv_dtype not in ("bf16", "int8"):

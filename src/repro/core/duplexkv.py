@@ -156,6 +156,10 @@ class DuplexKV:
         # cumulative transfer-byte accounting (global and per-shard)
         self.d2h_bytes_total = 0
         self.h2d_bytes_total = 0
+        # cumulative per-direction channel BUSY seconds (sim model time) —
+        # the flight recorder's channel-utilization counters
+        self.d2h_busy_s_total = 0.0
+        self.h2d_busy_s_total = 0.0
         self.eager = serving.eager_rotation and serving.duplex
         # Cross-iteration pipeline: eager D2H issued during iteration N keeps
         # its in-flight flags set while N's kernels execute (the copies
@@ -225,7 +229,9 @@ class DuplexKV:
                     d2h_bytes=self.d2h_bytes_total,
                     h2d_bytes=self.h2d_bytes_total,
                     d2h_bytes_per_shard=self.d2h_bytes_total // self.kv_shards,
-                    h2d_bytes_per_shard=self.h2d_bytes_total // self.kv_shards)
+                    h2d_bytes_per_shard=self.h2d_bytes_total // self.kv_shards,
+                    d2h_busy_s=self.d2h_busy_s_total,
+                    h2d_busy_s=self.h2d_busy_s_total)
 
     # -- scheduler residency view --------------------------------------------------
     def scheduler_view(self, requests) -> KVView:
@@ -302,6 +308,7 @@ class DuplexKV:
         stats = (self.engine.execute(descs, []) if descs
                  else TransferStats())
         self.d2h_bytes_total += stats.d2h_bytes
+        self.d2h_busy_s_total += stats.d2h_time
         if self.data is not None and descs:
             self.data.run_d2h(descs)
         self.table.complete_migrate_out(req_id)
@@ -400,6 +407,8 @@ class DuplexKV:
         stats = self.engine.execute(d2h, h2d)
         self.d2h_bytes_total += stats.d2h_bytes
         self.h2d_bytes_total += stats.h2d_bytes
+        self.d2h_busy_s_total += stats.d2h_time
+        self.h2d_busy_s_total += stats.h2d_time
 
         eager_stats = None
         if self.eager:
@@ -414,6 +423,7 @@ class DuplexKV:
                 if descs:
                     eager_stats = self.engine.execute(descs, [])
                     self.d2h_bytes_total += eager_stats.d2h_bytes
+                    self.d2h_busy_s_total += eager_stats.d2h_time
                     if self.data is not None:
                         self.data.run_d2h(descs)
                     if self.pipelined:

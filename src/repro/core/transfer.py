@@ -18,7 +18,7 @@ benchmarks/bench_transfer_engine.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import HardwareProfile, LinkProfile
 from repro.core.blocktable import TransferDesc
@@ -157,6 +157,10 @@ class PipelineTimeline:
     d2h_free: float = 0.0      # D2H channel busy-until (wall time)
     h2d_free: float = 0.0      # H2D channel busy-until (wall time)
     dep_ready: float = 0.0     # earliest next compute start (row deps)
+    # Absolute windows of the most recent ``advance`` call, for the flight
+    # recorder: {"exec"|"d2h"|"h2d": (start, end)}. Pure side record — the
+    # return contract and the channel frontiers are unchanged.
+    last: Optional[Dict[str, Tuple[float, float]]] = None
 
     def advance(self, t: float, exec_s: float, d2h_s: float, h2d_s: float,
                 *, exec_needs_h2d: bool = False, h2d_after_d2h: bool = False,
@@ -189,6 +193,9 @@ class PipelineTimeline:
             overlap += max(0.0, min(h2d_end, exec_end)
                            - max(h2d_start, exec_start))
         stall = exec_start - t
+        self.last = {"exec": (exec_start, exec_end),
+                     "d2h": (d2h_start, d2h_end),
+                     "h2d": (h2d_start, h2d_end)}
         return exec_end, overlap, stall
 
 

@@ -135,6 +135,13 @@ class Request:
     rotations: int = 0
     # number of cross-replica migrations (disaggregated prefill/decode)
     migrations: int = 0
+    # -- TTFT attribution bookkeeping (always on; pure-float side records) --
+    # engine clock when the request FIRST entered RUNNING (queue wait ends)
+    t_first_run: Optional[float] = None
+    # seconds spent rotated out (ROTARY) before the first token was emitted
+    pre_token_rotary_s: float = 0.0
+    # non-None while the request sits in ROTARY pre-first-token
+    _t_rotary_since: Optional[float] = None
 
     @property
     def prefill_done(self) -> bool:
@@ -158,16 +165,23 @@ class Request:
         """WAITING -> RUNNING: first prefill chunk scheduled on device."""
         self.state = RequestState.RUNNING
         self.t_run_start = t
+        if self.t_first_run is None:
+            self.t_first_run = t
 
-    def rotate_out(self) -> None:
+    def rotate_out(self, t: Optional[float] = None) -> None:
         """RUNNING -> ROTARY: KV leaves HBM (active rotation or OOM preempt)."""
         self.state = RequestState.ROTARY
         self.rotations += 1
+        if t is not None and self.t_first_token is None:
+            self._t_rotary_since = t
 
     def resume(self, t: float) -> None:
         """ROTARY -> RUNNING: swap-in transfer completed."""
         self.state = RequestState.RUNNING
         self.t_run_start = t
+        if self._t_rotary_since is not None:
+            self.pre_token_rotary_s += t - self._t_rotary_since
+            self._t_rotary_since = None
 
     def begin_migration(self) -> None:
         """RUNNING/ROTARY -> ROTARY for a cross-replica handoff: KV is
@@ -225,6 +239,24 @@ class Request:
         if self.t_first_token is None:
             return None
         return self.t_first_token - self.arrival_time
+
+    def ttft_breakdown(self) -> Optional[dict]:
+        """Decompose TTFT into queue-wait, rotation-stall and
+        prefill-compute components (sim-clock seconds). The three parts sum
+        to ``ttft()`` exactly by construction: queue wait ends at the first
+        RUNNING transition, rotation stall is the accumulated pre-first-
+        token ROTARY time, and prefill compute is the remainder (chunked
+        prefill execution plus any in-batch queueing between chunks).
+        ``None`` until the first token exists."""
+        t = self.ttft()
+        if t is None or self.t_first_run is None:
+            return None
+        queue = self.t_first_run - self.arrival_time
+        rot = self.pre_token_rotary_s
+        return {"ttft_s": t,
+                "queue_wait_s": queue,
+                "rotation_stall_s": rot,
+                "prefill_compute_s": t - queue - rot}
 
     def tbt_values(self) -> List[float]:
         ts = self.token_times

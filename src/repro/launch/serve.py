@@ -44,6 +44,8 @@ import argparse
 import dataclasses
 import json
 
+from repro.serving.telemetry import emit_json_report
+
 
 def main(argv=None):
     # --tp must act before ANYTHING imports jax: a CPU host exposes one XLA
@@ -172,6 +174,13 @@ def main(argv=None):
                          "in the output)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="record the flight recorder (lifecycle spans + "
+                    "per-iteration engine events; see DESIGN.md "
+                    "§Observability)")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="write a Perfetto/Chrome-trace JSON of the run "
+                    "(implies --telemetry); open at https://ui.perfetto.dev")
     args = ap.parse_args(argv)
     if args.replicas < 1:
         ap.error("--replicas must be >= 1")
@@ -205,7 +214,8 @@ def main(argv=None):
         pipeline=args.pipeline,
         prefix_cache=(args.prefix_cache == "on"),
         paged_runner=args.paged_runner, tp=args.tp,
-        kv_dtype=args.kv_dtype)
+        kv_dtype=args.kv_dtype,
+        telemetry=bool(args.telemetry or args.trace_out))
     hw = HW_PROFILES[args.hw]
     arrival_kw = (dict(burst_on=args.burst_on, burst_off=args.burst_off,
                        burst_factor=args.burst_factor)
@@ -326,7 +336,28 @@ def main(argv=None):
             attn_launches=sum(e.attn_launches for e in execs),
             kv_copy_launches=sum(e.store.copy_launches for e in execs),
             kv_rows_moved=sum(e.store.d2h_rows + e.store.h2d_rows
-                              + e.store.d2d_rows for e in execs))
+                              + e.store.d2d_rows for e in execs),
+            # host-side dispatch wall time (observability; sim clock is
+            # still the timing authority)
+            prefill_launch_wall_s=round(
+                sum(e.prefill_launch_wall_s for e in execs), 6),
+            decode_launch_wall_s=round(
+                sum(e.decode_launch_wall_s for e in execs), 6),
+            kv_copy_launch_wall_s=round(
+                sum(e.store.copy_launch_wall_s
+                    + e.store.upload_launch_wall_s for e in execs), 6))
+    if sv.telemetry:
+        from repro.serving.telemetry import buses_of
+        from repro.serving.trace_export import write_trace
+        buses = buses_of(cores)
+        row.update(telemetry=dict(
+            spans=sum(b.spans_recorded for b in buses),
+            spans_dropped=sum(b.spans_dropped for b in buses),
+            events=sum(b.events_recorded for b in buses),
+            events_dropped=sum(b.events_dropped for b in buses)))
+        if args.trace_out:
+            write_trace(args.trace_out, cores)
+            row.update(trace_out=args.trace_out)
     if args.prefix_cache == "on":
         row.update(cache_counters=cache_counters)
     if args.slo_mix:
@@ -346,7 +377,9 @@ def main(argv=None):
                             p99_ttft=p.report.p99_ttft)
                        for p in router.per_replica_reports()])
     if args.json:
-        print(json.dumps(row, indent=1))
+        # one JSON document on stdout (CI pipes this into json.load), via
+        # the shared telemetry emitter
+        emit_json_report(row)
     else:
         per_class = row.pop("per_class", {})
         for k, v in row.items():

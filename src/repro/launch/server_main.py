@@ -32,7 +32,8 @@ import sys
 import time
 from typing import List, Optional
 
-from repro.serving.server import ServerConfig, log_event
+from repro.serving.server import ServerConfig
+from repro.serving.telemetry import log_event
 
 RESTART_RESET_S = 30.0          # child uptime that clears the crash streak
 _BOOL_FLAGS = {"disagg", "pipeline", "prefix_cache", "paged_runner"}
@@ -101,7 +102,7 @@ class Supervisor:
         signal.signal(signal.SIGTERM, self._on_signal)
         signal.signal(signal.SIGINT, self._on_signal)
         log_event("launcher_up", pid=os.getpid(),
-                  config=json.dumps(self.cfg.to_dict()))
+                  config=self.cfg.to_dict())
         crashes = 0
         code = 0
         while not self.stop_requested:

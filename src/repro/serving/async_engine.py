@@ -296,6 +296,15 @@ class AsyncServingEngine:
         self._enqueue(run)
         return await fut
 
+    async def snapshot_trace(self) -> Any:
+        """Perfetto/Chrome-trace JSON of the engine's flight recorder,
+        assembled on the driver thread (the buses are engine state)."""
+        from repro.serving.server import engine_cores
+        from repro.serving.trace_export import trace_from_cores
+
+        return await self.call(lambda eng: trace_from_cores(
+            engine_cores(eng)))
+
     # ------------------------------------------------------------ driver side
     def _check_admitting(self) -> None:
         if self._crashed is not None:

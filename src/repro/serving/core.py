@@ -129,13 +129,14 @@ class AdmissionController:
             return min(need, kv_view.releasable.get(r.req_id, need))
         return need
 
-    def apply(self, decision, kv_view=None) -> AdmissionOutcome:
+    def apply(self, decision, kv_view=None,
+              t: Optional[float] = None) -> AdmissionOutcome:
         out = AdmissionOutcome()
         for r in decision.preempted:
             if r.state != RequestState.RUNNING:
                 continue
             out.preempt_ids.append(r.req_id)
-            r.rotate_out()
+            r.rotate_out(t)
             self.stats.active_rotations += 1
             self.executor.swap_out(r.req_id)
 
@@ -154,9 +155,10 @@ class AdmissionController:
                 budget -= need
         return out
 
-    def passive_preempt(self, r: Request, out: AdmissionOutcome) -> None:
+    def passive_preempt(self, r: Request, out: AdmissionOutcome,
+                        t: Optional[float] = None) -> None:
         out.preempt_ids.append(r.req_id)
-        r.rotate_out()
+        r.rotate_out(t)
         self.stats.passive_preemptions += 1
         self.executor.swap_out(r.req_id)
 
@@ -193,7 +195,7 @@ class BatchBuilder:
             try:
                 self.kv.grow(r.req_id, r.blocks_needed(bs, lookahead=1))
             except OutOfBlocks:
-                self.admission.passive_preempt(r, adm)
+                self.admission.passive_preempt(r, adm, t)
                 continue
             plan.decode_reqs.append(r.req_id)
             plan.decode_kv_tokens += r.total_len
@@ -210,7 +212,7 @@ class BatchBuilder:
                 self.kv.grow(r.req_id, needed)
             except OutOfBlocks:
                 if r.state == RequestState.RUNNING:
-                    self.admission.passive_preempt(r, adm)
+                    self.admission.passive_preempt(r, adm, t)
                 continue
             if r.state == RequestState.WAITING:
                 self.admission.start_prefill(r, t)
@@ -265,6 +267,16 @@ class EngineCore:
             self.executor.bind(self.kv)   # pool-backed executors attach here
         self.stats = EngineStats()
         self.clock = 0.0
+        # Flight recorder (DESIGN.md §Observability). Default off: no bus
+        # is allocated and step() takes the golden-replay code path — every
+        # telemetry hook below is behind ``if self.telemetry is not None``.
+        self.replica_index = 0
+        self.replica_role = "replica"
+        self.telemetry = None
+        if getattr(serving, "telemetry", False):
+            from repro.serving.telemetry import TelemetryBus
+            self.telemetry = TelemetryBus(
+                capacity=getattr(serving, "telemetry_buffer", 65536))
         self._exec_ema = 0.03   # for auto B_xfer sizing
         # Cross-iteration two-stage pipeline (ServingConfig.pipeline): the
         # per-direction transfer channels persist across step() calls and
@@ -356,6 +368,15 @@ class EngineCore:
             self.collector.attach(handle)
         return handle
 
+    def set_replica(self, index: int, role: str = "replica") -> None:
+        """Label this core for multi-replica telemetry/metrics (router
+        replicas, disagg prefill/decode pools)."""
+        self.replica_index = int(index)
+        self.replica_role = role
+        if self.telemetry is not None:
+            self.telemetry.replica = int(index)
+            self.telemetry.role = role
+
     def abort(self, req_id: int) -> bool:
         """Cancel a request: free its HBM/DRAM blocks, cancel any pending
         swap-in, and drop it from the pending/active sets. Safe in any
@@ -371,6 +392,10 @@ class EngineCore:
         self.kv.finish(req_id)
         self.executor.drop(req_id)
         r.finish_at(self.clock, reason=FINISH_ABORTED)
+        if self.telemetry is not None:
+            self.telemetry.span("FINISH", req_id, self.clock, self.clock,
+                                slo_class=r.slo_class, reason=FINISH_ABORTED,
+                                tokens=r.tokens_generated)
         del self._index[req_id]
         self.stats.aborted += 1
         self.collector.dispatch([r.make_output(self.clock)])
@@ -511,7 +536,7 @@ class EngineCore:
 
         # -- admission / preemption (same residency snapshot as the
         # scheduler, so the two layers' block accounting cannot drift) ------
-        adm = self.admission.apply(decision, kv_view=kv_view)
+        adm = self.admission.apply(decision, kv_view=kv_view, t=t)
 
         # -- build device batch ---------------------------------------------
         plan = self.batcher.build(self.active, adm, t)
@@ -572,13 +597,34 @@ class EngineCore:
             self.stats.stall_time += stall
             self.stats.overlap_ms += (ov + hidden_plan) * 1e3
             self._pipe_warm = True
+            if self.telemetry is not None:
+                w = self._timeline.last
+                tel_w = dict(exec_start=w["exec"][0],
+                             exec_dur=w["exec"][1] - w["exec"][0],
+                             d2h_start=w["d2h"][0], h2d_start=w["h2d"][0],
+                             overlap=ov, stall=stall, hidden=hidden_plan)
         elif self.serving.pipeline_overlap:
             iter_s = max(exec_s, tr_s, 1e-4)
             self.stats.stall_time += max(tr_s - exec_s, 0.0)
             self.stats.overlap_ms += min(exec_s, tr_s) * 1e3
+            if self.telemetry is not None:
+                # within-iteration overlap: both channels start with exec;
+                # a half-duplex link serializes H2D behind D2H
+                serial_dirs = self.kv.engine.mode != "duplex"
+                d2h_busy = xfers.stats.d2h_time + eager_d2h
+                tel_w = dict(exec_start=t, exec_dur=exec_s, d2h_start=t,
+                             h2d_start=t + (d2h_busy if serial_dirs else 0.0),
+                             overlap=min(exec_s, tr_s),
+                             stall=max(tr_s - exec_s, 0.0), hidden=0.0)
         else:
             iter_s = exec_s + tr_s + 0.001   # serial schedule+transfer
             self.stats.stall_time += tr_s
+            if self.telemetry is not None:
+                # strictly serial: transfers land, then the batch executes
+                d2h_busy = xfers.stats.d2h_time + eager_d2h
+                tel_w = dict(exec_start=t + tr_s + 0.001, exec_dur=exec_s,
+                             d2h_start=t, h2d_start=t + d2h_busy,
+                             overlap=0.0, stall=tr_s, hidden=0.0)
         self.clock = t + iter_s
         self.stats.iterations += 1
         self.stats.exec_time += exec_s
@@ -667,6 +713,9 @@ class EngineCore:
                                  new_ids.get(r.req_id))
                    for r in self.active if r.req_id in new_count]
         self.collector.dispatch(outputs)
+        if self.telemetry is not None:
+            self._record_telemetry(t, adm, plan, xfers, eager_d2h,
+                                   admitted, resumed, finished, tel_w)
         for rid in finished:
             self._index.pop(rid, None)
         self.active = [r for r in self.active
@@ -676,6 +725,87 @@ class EngineCore:
             t_start=t, t_end=self.clock, exec_s=exec_s, transfer_s=tr_s,
             plan=plan, admitted=admitted, resumed=resumed,
             preempted=adm.preempt_ids, finished=finished, outputs=outputs)
+
+    # -------------------------------------------------------------- telemetry
+    def _record_telemetry(self, t: float, adm: AdmissionOutcome,
+                          plan: BatchPlan, xfers, eager_d2h: float,
+                          admitted: List[int], resumed: List[int],
+                          finished: List[int], w: Dict[str, float]) -> None:
+        """Record this iteration on the flight recorder: one EngineEvent
+        (execution + per-direction channel windows) plus the request
+        lifecycle spans it produced. Called only when the bus exists;
+        append-only side records — nothing here feeds back into the sim."""
+        from repro.core.vlt import vlt
+        tel = self.telemetry
+        bb = self.kv.block_bytes
+        eager_bytes = xfers.eager_stats.d2h_bytes if xfers.eager_stats else 0
+        d2h_busy = xfers.stats.d2h_time + eager_d2h
+        h2d_busy = xfers.stats.h2d_time
+        tel.event(
+            iteration=self.stats.iterations, t_start=t, t_end=self.clock,
+            exec_start=w["exec_start"], exec_s=w["exec_dur"],
+            d2h_start=w["d2h_start"], d2h_s=d2h_busy,
+            h2d_start=w["h2d_start"], h2d_s=h2d_busy,
+            sched_s=self.executor.plan_time(plan),
+            overlap_s=w["overlap"], stall_s=w["stall"],
+            plan_hidden_s=w["hidden"],
+            attrs=dict(
+                decode_reqs=len(plan.decode_reqs),
+                prefill_chunks=len(plan.prefill_chunks),
+                prefill_tokens=plan.prefill_tokens,
+                decode_kv_tokens=plan.decode_kv_tokens,
+                hbm_free_blocks=self.kv.hbm_free_blocks,
+                cache_hit_tokens=self.kv.table.cache_hit_tokens,
+                d2h_bytes=xfers.stats.d2h_bytes + eager_bytes,
+                h2d_bytes=xfers.stats.h2d_bytes,
+                kv_shards=self.kv.kv_shards,
+                vlt_max=max((vlt(r, t, self.serving.rotary)
+                             for r in self.active), default=0.0)))
+        admitted_set = set(admitted)
+        for r in adm.started:
+            if r.req_id in admitted_set:
+                tel.span("ADMIT", r.req_id, r.arrival_time, t,
+                         slo_class=r.slo_class,
+                         queue_wait_s=t - r.arrival_time)
+        for rid, take in plan.prefill_chunks:
+            r = self._by_id(rid)
+            if r is not None:
+                tel.span("PREFILL", rid, w["exec_start"],
+                         w["exec_start"] + w["exec_dur"],
+                         slo_class=r.slo_class, tokens=take,
+                         pos=r.prefill_pos)
+        for rid in plan.decode_reqs:
+            r = self._by_id(rid)
+            if r is not None:
+                tel.span("DECODE", rid, w["exec_start"],
+                         w["exec_start"] + w["exec_dur"],
+                         slo_class=r.slo_class,
+                         tokens_generated=r.tokens_generated)
+        for rid in adm.preempt_ids:
+            r = self._by_id(rid)
+            if r is not None:
+                tel.span("ROTATE_OUT", rid, w["d2h_start"],
+                         w["d2h_start"] + d2h_busy,
+                         slo_class=r.slo_class, direction="d2h",
+                         bytes=len(self.kv.table.blocks_of(rid)) * bb)
+        for rid in resumed:
+            r = self._by_id(rid)
+            if r is not None:
+                tel.span("ROTATE_IN", rid, w["h2d_start"],
+                         w["h2d_start"] + h2d_busy,
+                         slo_class=r.slo_class, direction="h2d",
+                         bytes=len(self.kv.table.blocks_of(rid)) * bb)
+        for rid in finished:
+            r = self._by_id(rid)
+            if r is not None:
+                attrs = dict(reason=r.finish_reason,
+                             tokens=r.tokens_generated,
+                             rotations=r.rotations, migrations=r.migrations)
+                bd = r.ttft_breakdown()
+                if bd is not None:
+                    attrs.update(bd)
+                tel.span("FINISH", rid, self.clock, self.clock,
+                         slo_class=r.slo_class, **attrs)
 
     # ------------------------------------------------------------------ utils
     def _plan_rows(self, plan: BatchPlan) -> Tuple[Set[int], Set[int]]:

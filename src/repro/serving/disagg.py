@@ -75,6 +75,9 @@ class DisaggCluster:
         self.decode_pool: List[EngineCore] = [mk()
                                               for _ in range(decode_replicas)]
         self.replicas: List[EngineCore] = self.prefill_pool + self.decode_pool
+        for i, core in enumerate(self.replicas):
+            core.set_replica(i, role=("prefill" if i < prefill_replicas
+                                      else "decode"))
         self._pool_of = {id(c): PREFILL_POOL for c in self.prefill_pool}
         self._pool_of.update({id(c): DECODE_POOL for c in self.decode_pool})
         self.serving = serving
@@ -299,6 +302,19 @@ class DisaggCluster:
         src.detach_request(r.req_id)
         r.begin_migration()
         dst.adopt_request(r, arrival_time=rec.t_ready)
+        if src.telemetry is not None:
+            src.telemetry.span(
+                "MIGRATE", r.req_id, rec.t_start, rec.t_ready,
+                slo_class=r.slo_class, direction="d2h",
+                bytes=rec.nbytes, d2h_bytes=rec.d2h_bytes,
+                blocks=rec.blocks, dst_replica=dst.replica_index,
+                shared_on_target=rec.shared_on_target)
+        if dst.telemetry is not None:
+            dst.telemetry.span(
+                "MIGRATE", r.req_id, rec.t_start, rec.t_ready,
+                slo_class=r.slo_class, direction="h2d",
+                bytes=rec.nbytes, blocks=rec.blocks,
+                src_replica=src.replica_index)
         handle = src.collector.detach(r.req_id)
         if handle is not None:
             dst.collector.attach(handle)

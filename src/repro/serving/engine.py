@@ -88,6 +88,16 @@ class ServingEngine:
     def clock(self) -> float:
         return self.core.clock
 
+    @property
+    def telemetry(self):
+        """The flight-recorder bus (None unless ServingConfig.telemetry)."""
+        return self.core.telemetry
+
+    def write_trace(self, path: str):
+        """Export this engine's flight recorder as a Perfetto JSON file."""
+        from repro.serving.trace_export import write_trace
+        return write_trace(path, [self.core])
+
     # ------------------------------------------------------------- online API
     def add_request(self, prompt_len=None, *,
                     prompt_ids: Optional[Sequence[int]] = None,

@@ -30,6 +30,37 @@ def percentile(vals: Sequence[float], p: float) -> float:
 
 
 @dataclasses.dataclass
+class TTFTMissBreakdown:
+    """Summed attribution over the requests that MISSED their TTFT SLO:
+    where the violated time actually went. ``queue_wait_s`` (arrival to
+    first RUNNING) + ``rotation_stall_s`` (pre-first-token ROTARY time) +
+    ``prefill_compute_s`` (the remainder: chunked-prefill execution and
+    in-batch queueing between chunks) == ``ttft_s`` exactly, per request
+    and therefore summed (see ``Request.ttft_breakdown``)."""
+    n_missed: int = 0
+    ttft_s: float = 0.0
+    queue_wait_s: float = 0.0
+    rotation_stall_s: float = 0.0
+    prefill_compute_s: float = 0.0
+
+
+def _miss_breakdown(requests: Sequence[Request]) -> TTFTMissBreakdown:
+    bd = TTFTMissBreakdown()
+    for r in requests:
+        if r.aborted or r.ttft_ok() is not False:
+            continue
+        d = r.ttft_breakdown()
+        if d is None:
+            continue
+        bd.n_missed += 1
+        bd.ttft_s += d["ttft_s"]
+        bd.queue_wait_s += d["queue_wait_s"]
+        bd.rotation_stall_s += d["rotation_stall_s"]
+        bd.prefill_compute_s += d["prefill_compute_s"]
+    return bd
+
+
+@dataclasses.dataclass
 class ClassReport:
     """Attainment breakdown for one SLO class."""
     n: int
@@ -39,6 +70,8 @@ class ClassReport:
     tbt_attainment: float
     p50_ttft: float
     p99_ttft: float
+    ttft_miss: TTFTMissBreakdown = dataclasses.field(
+        default_factory=TTFTMissBreakdown)
 
 
 @dataclasses.dataclass
@@ -71,6 +104,8 @@ class SLOReport:
     transfer_ms: float = 0.0
     execute_ms: float = 0.0
     overlap_ms: float = 0.0
+    ttft_miss: TTFTMissBreakdown = dataclasses.field(
+        default_factory=TTFTMissBreakdown)
     per_class: Dict[str, ClassReport] = dataclasses.field(default_factory=dict)
 
     def row(self) -> Dict[str, object]:
@@ -122,7 +157,8 @@ def evaluate(requests: Sequence[Request], *, total_time: float,
             ttft_attainment=len(s_ttft_ok) / len(s_live) if s_live else 0.0,
             tbt_attainment=len(s_tbt_ok) / len(s_live) if s_live else 0.0,
             p50_ttft=percentile(s_ttfts, 50),
-            p99_ttft=percentile(s_ttfts, 99))
+            p99_ttft=percentile(s_ttfts, 99),
+            ttft_miss=_miss_breakdown(sub))
     cached_toks = sum(r.num_cached_tokens for r in requests)
     prompt_toks = sum(r.prompt_len for r in requests)
     return SLOReport(
@@ -146,4 +182,5 @@ def evaluate(requests: Sequence[Request], *, total_time: float,
         transfer_ms=timing.get("transfer_ms", 0.0) if timing else 0.0,
         execute_ms=timing.get("execute_ms", 0.0) if timing else 0.0,
         overlap_ms=timing.get("overlap_ms", 0.0) if timing else 0.0,
+        ttft_miss=_miss_breakdown(requests),
         per_class=per_class)

@@ -38,6 +38,7 @@ layer for the faithfulness discussion.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -156,6 +157,11 @@ class PagedKVStore:
         self.d2d_rows = 0
         self.d2h_rows = 0
         self.h2d_rows = 0
+        # wall-clock seconds spent DISPATCHING kernel launches (async
+        # enqueue cost, host side). Observability only — never fed back
+        # into the sim clock, which stays the model's timing authority.
+        self.copy_launch_wall_s = 0.0
+        self.upload_launch_wall_s = 0.0
 
         from repro.kernels.kv_copy import kv_copy_tpu
 
@@ -251,12 +257,16 @@ class PagedKVStore:
         s = np.full(np2, -1, np.int32)
         d = np.zeros(np2, np.int32)
         s[:n], d[:n] = src, dst
-        if self.quantized:
-            self.pool, self.scales = self._jit_copy_q(
-                self.pool, self.scales, jnp.asarray(s), jnp.asarray(d))
-        else:
-            self.pool = self._jit_copy(self.pool, jnp.asarray(s),
-                                       jnp.asarray(d))
+        import jax
+        t0 = time.perf_counter()
+        with jax.named_scope("superinfer.kv_copy"):
+            if self.quantized:
+                self.pool, self.scales = self._jit_copy_q(
+                    self.pool, self.scales, jnp.asarray(s), jnp.asarray(d))
+            else:
+                self.pool = self._jit_copy(self.pool, jnp.asarray(s),
+                                           jnp.asarray(d))
+        self.copy_launch_wall_s += time.perf_counter() - t0
         self.copy_launches += 1
 
     # -- DuplexKV data-backend protocol ------------------------------------
@@ -324,22 +334,28 @@ class PagedKVStore:
                         f"{d.src_slot} holds no data (lost copy)")
                 rows.append(row)
             np2 = _pow2(n)
-            if self.quantized:
-                vals = [r[0] for r in rows]
-                srows = [r[1] for r in rows]
-                buf = np.zeros((np2,) + self.row_shape, vals[0].dtype)
-                buf[:n] = np.stack(vals)
-                sbuf = np.zeros((np2,) + self.scale_row_shape, np.float32)
-                sbuf[:n] = np.stack(srows)
-                self.pool, self.scales = self._jit_upload_q(
-                    self.pool, self.scales, jnp.asarray(buf),
-                    jnp.asarray(sbuf), jnp.asarray(self.h2d_base, np.int32))
-            else:
-                buf = np.zeros((np2,) + self.row_shape, rows[0].dtype)
-                buf[:n] = np.stack(rows)
-                self.pool = self._jit_upload(
-                    self.pool, jnp.asarray(buf),
-                    jnp.asarray(self.h2d_base, np.int32))
+            import jax
+            t0 = time.perf_counter()
+            with jax.named_scope("superinfer.kv_upload"):
+                if self.quantized:
+                    vals = [r[0] for r in rows]
+                    srows = [r[1] for r in rows]
+                    buf = np.zeros((np2,) + self.row_shape, vals[0].dtype)
+                    buf[:n] = np.stack(vals)
+                    sbuf = np.zeros((np2,) + self.scale_row_shape,
+                                    np.float32)
+                    sbuf[:n] = np.stack(srows)
+                    self.pool, self.scales = self._jit_upload_q(
+                        self.pool, self.scales, jnp.asarray(buf),
+                        jnp.asarray(sbuf),
+                        jnp.asarray(self.h2d_base, np.int32))
+                else:
+                    buf = np.zeros((np2,) + self.row_shape, rows[0].dtype)
+                    buf[:n] = np.stack(rows)
+                    self.pool = self._jit_upload(
+                        self.pool, jnp.asarray(buf),
+                        jnp.asarray(self.h2d_base, np.int32))
+            self.upload_launch_wall_s += time.perf_counter() - t0
             self._copy_rows(list(range(self.h2d_base, self.h2d_base + n)),
                             [d.dst_slot for d in chunk])
             self.h2d_rows += n
@@ -479,6 +495,10 @@ class PagedModelRunner(Executor):
         self.decode_tokens = 0
         self.attn_launches = 0
         self.prefill_chunks_run = 0
+        # host-side dispatch wall time per launch family (observability
+        # only; the sim clock never reads these)
+        self.prefill_launch_wall_s = 0.0
+        self.decode_launch_wall_s = 0.0
 
     # ------------------------------------------------------------- binding
     def bind(self, kv) -> None:
@@ -620,16 +640,21 @@ class PagedModelRunner(Executor):
         ids_p[:take] = ids
         rows_p = np.full(mbp, self.store.trash_row, np.int32)
         rows_p[:min(len(rows), mbp)] = rows[:mbp]
-        if self.quantized:
-            self.store.pool, self.store.scales, tok = self._jit_prefill(
-                self._layers, self._head, self.store.pool, self.store.scales,
-                jnp.asarray(ids_p), jnp.asarray(start, jnp.int32),
-                jnp.asarray(take, jnp.int32), jnp.asarray(rows_p))
-        else:
-            self.store.pool, tok = self._jit_prefill(
-                self._layers, self._head, self.store.pool,
-                jnp.asarray(ids_p), jnp.asarray(start, jnp.int32),
-                jnp.asarray(take, jnp.int32), jnp.asarray(rows_p))
+        import jax
+        t0 = time.perf_counter()
+        with jax.named_scope("superinfer.prefill_chunk"):
+            if self.quantized:
+                self.store.pool, self.store.scales, tok = self._jit_prefill(
+                    self._layers, self._head, self.store.pool,
+                    self.store.scales,
+                    jnp.asarray(ids_p), jnp.asarray(start, jnp.int32),
+                    jnp.asarray(take, jnp.int32), jnp.asarray(rows_p))
+            else:
+                self.store.pool, tok = self._jit_prefill(
+                    self._layers, self._head, self.store.pool,
+                    jnp.asarray(ids_p), jnp.asarray(start, jnp.int32),
+                    jnp.asarray(take, jnp.int32), jnp.asarray(rows_p))
+        self.prefill_launch_wall_s += time.perf_counter() - t0
         self.prefill_chunks_run += 1
         if start + take >= r.prompt_len and r.tokens_generated == 0:
             return tok if defer else int(tok)   # defer: device array, no sync
@@ -655,14 +680,19 @@ class PagedModelRunner(Executor):
             cl_p[i] = cls[i]
             k = min(len(rows[i]), mbp)
             bt[i, :k] = rows[i][:k]
-        if self.quantized:
-            self.store.pool, self.store.scales, nxt = self._jit_decode(
-                self._layers, self._head, self.store.pool, self.store.scales,
-                jnp.asarray(toks), jnp.asarray(bt), jnp.asarray(cl_p))
-        else:
-            self.store.pool, nxt = self._jit_decode(
-                self._layers, self._head, self.store.pool,
-                jnp.asarray(toks), jnp.asarray(bt), jnp.asarray(cl_p))
+        import jax
+        t0 = time.perf_counter()
+        with jax.named_scope("superinfer.paged_decode"):
+            if self.quantized:
+                self.store.pool, self.store.scales, nxt = self._jit_decode(
+                    self._layers, self._head, self.store.pool,
+                    self.store.scales,
+                    jnp.asarray(toks), jnp.asarray(bt), jnp.asarray(cl_p))
+            else:
+                self.store.pool, nxt = self._jit_decode(
+                    self._layers, self._head, self.store.pool,
+                    jnp.asarray(toks), jnp.asarray(bt), jnp.asarray(cl_p))
+        self.decode_launch_wall_s += time.perf_counter() - t0
         self.decode_batches += 1
         self.decode_tokens += len(dec)
         self.attn_launches += len(self._layers)

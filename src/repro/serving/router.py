@@ -160,6 +160,8 @@ class Router:
         self.replicas: List[EngineCore] = [
             EngineCore(cfg, serving, hw, runner_cfg=runner_cfg,
                        runner_seed=runner_seed) for _ in range(replicas)]
+        for i, core in enumerate(self.replicas):
+            core.set_replica(i)
         self.policy = make_policy(policy)
         self._owner: Dict[int, int] = {}   # req_id -> replica index
         self._next_req_id = 0              # cluster-unique ids (handle path)

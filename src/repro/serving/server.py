@@ -58,12 +58,10 @@ MAX_BODY_BYTES = 1 << 20
 REQUEST_TIMEOUT_S = 30.0
 
 
-def log_event(event: str, **kw) -> None:
-    """Structured single-line logging: ``[ts] event=... k=v ...``."""
-    ts = time.strftime("%Y-%m-%dT%H:%M:%S")
-    fields = " ".join(f"{k}={v}" for k, v in kw.items())
-    print(f"[{ts}] event={event}" + (f" {fields}" if fields else ""),
-          file=sys.stderr, flush=True)
+# Structured JSON-lines logging: one {"ts": ..., "event": ..., **fields}
+# object per stderr line — the single emitter shared with serve.py and the
+# launcher supervisor (re-exported here; see telemetry.StructuredLogger).
+from repro.serving.telemetry import log_event  # noqa: E402  (re-export)
 
 
 # --------------------------------------------------------------------- config
@@ -94,6 +92,10 @@ class ServerConfig:
     ready_headroom: float = 0.005     # min free-HBM fraction for /readyz
     pace: bool = True                 # wall-clock pacing (False = replay)
     seed: int = 0
+    # Flight recorder on every replica (GET /v1/trace, Prometheus
+    # iteration histograms). The HTTP path carries no golden-replay
+    # contract, so it records by default; --no-telemetry turns it off.
+    telemetry: bool = True
     # supervisor knobs (consumed by launch.server_main, not the server)
     max_restarts: int = 3
     backoff_base: float = 0.5
@@ -172,7 +174,8 @@ class ServerConfig:
                            prefix_cache=self.prefix_cache,
                            paged_runner=self.paged_runner,
                            tp=self.tp,
-                           kv_dtype=self.kv_dtype)
+                           kv_dtype=self.kv_dtype,
+                           telemetry=self.telemetry)
         hw = HW_PROFILES[self.hw]
         runner_cfg = None
         if self.paged_runner:   # real execution: reduced fp32 model on CPU
@@ -281,7 +284,8 @@ def _json_response(writer: asyncio.StreamWriter, status: int,
 # ``POST /v1/generate`` reuses after a CLEAN stream end (terminal chunk
 # delivered) — bytes of a pipelined next request that the disconnect
 # watcher swallowed mid-stream are pushed back before the next parse.
-_KEEPALIVE_PATHS = frozenset({"/healthz", "/readyz", "/v1/metrics"})
+_KEEPALIVE_PATHS = frozenset({"/healthz", "/readyz", "/v1/metrics",
+                              "/v1/trace"})
 _KEEPALIVE_POST_PATHS = frozenset({"/v1/generate"})
 
 
@@ -422,6 +426,7 @@ class InferenceServer:
                 if req is None:
                     return
                 method, path, headers, body = req
+                path, _, query = path.partition("?")
                 self.http_requests += 1
                 wants_keep = (headers.get("connection", "").lower()
                               == "keep-alive")
@@ -430,7 +435,8 @@ class InferenceServer:
                     or (method == "POST" and path in _KEEPALIVE_POST_PATHS))
                 try:
                     keep = await self._dispatch(method, path, body, reader,
-                                                writer, keep_alive=keep)
+                                                writer, keep_alive=keep,
+                                                query=query, headers=headers)
                 except HttpError as e:
                     _json_response(writer, e.status, {"error": e.message})
                     keep = False           # error responses always close
@@ -455,7 +461,8 @@ class InferenceServer:
     async def _dispatch(self, method: str, path: str, body: bytes,
                         reader: asyncio.StreamReader,
                         writer: asyncio.StreamWriter, *,
-                        keep_alive: bool = False) -> bool:
+                        keep_alive: bool = False, query: str = "",
+                        headers: Optional[Dict[str, str]] = None) -> bool:
         """Route one request; returns whether the connection may be reused
         (``_generate`` can demote an approved keep-alive mid-stream)."""
         if path == "/healthz":
@@ -481,7 +488,20 @@ class InferenceServer:
         elif path == "/v1/metrics":
             if method != "GET":
                 raise HttpError(405, "use GET")
-            await self._metrics(writer, keep_alive=keep_alive)
+            # content negotiation: JSON stays the default (existing
+            # clients/CI); Prometheus text on ?format=prometheus or an
+            # Accept header asking for text/plain or openmetrics
+            accept = (headers or {}).get("accept", "")
+            if ("format=prometheus" in query or "text/plain" in accept
+                    or "openmetrics" in accept):
+                await self._metrics_prometheus(writer,
+                                               keep_alive=keep_alive)
+            else:
+                await self._metrics(writer, keep_alive=keep_alive)
+        elif path == "/v1/trace":
+            if method != "GET":
+                raise HttpError(405, "use GET")
+            await self._trace(writer, keep_alive=keep_alive)
         elif path == "/v1/generate":
             if method != "POST":
                 raise HttpError(405, "use POST")
@@ -507,6 +527,46 @@ class InferenceServer:
             "draining": self._draining,
         }
         _json_response(writer, 200, row, keep_alive=keep_alive)
+
+    async def _metrics_prometheus(self, writer: asyncio.StreamWriter, *,
+                                  keep_alive: bool = False) -> None:
+        """Prometheus text-format 0.0.4 exposition (stdlib-only)."""
+        from repro.serving.telemetry import render_prometheus
+        ready, _, headroom = self._readiness()
+        extra = {
+            "ready": int(ready),
+            "hbm_headroom": headroom,
+            "uptime_seconds": round(time.monotonic() - self._t_up, 3),
+            "engine_steps": self.service.steps,
+            "http_requests": self.http_requests,
+            "streams_started": self.streams_started,
+            "streams_active": self.streams_active,
+            "aborted_on_disconnect": self.aborted_on_disconnect,
+            "draining": int(self._draining),
+        }
+        try:
+            text = await self.service.call(
+                lambda eng: render_prometheus(engine_cores(eng),
+                                              extra=extra))
+        except (ServiceStopped, ServiceDraining) as e:
+            raise HttpError(503, f"metrics unavailable: {e}") from e
+        body = text.encode()
+        writer.write(_response_head(200, {
+            "Content-Type": "text/plain; version=0.0.4; charset=utf-8",
+            "Content-Length": str(len(body)),
+            "Connection": "keep-alive" if keep_alive else "close"}) + body)
+
+    async def _trace(self, writer: asyncio.StreamWriter, *,
+                     keep_alive: bool = False) -> None:
+        """Perfetto/Chrome-trace JSON of the replicas' flight recorders
+        (empty trace when ``telemetry`` is off)."""
+        from repro.serving.trace_export import trace_from_cores
+        try:
+            trace = await self.service.call(
+                lambda eng: trace_from_cores(engine_cores(eng)))
+        except (ServiceStopped, ServiceDraining) as e:
+            raise HttpError(503, f"trace unavailable: {e}") from e
+        _json_response(writer, 200, trace, keep_alive=keep_alive)
 
     # -------------------------------------------------------------- generate
     @staticmethod

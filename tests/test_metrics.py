@@ -1,0 +1,146 @@
+"""SLO-report edge cases: ``evaluate`` and ``merge_reports`` on empty
+inputs, all-aborted classes, classes present on only one replica, and the
+never-produced-a-token population (``n_no_token``) in attainment
+denominators. Complements the end-to-end accounting checks in
+test_engine_core.py with synthetic request populations where every
+expected number is computable by hand."""
+import pytest
+
+from repro.core.types import SLO_CLASSES, Request
+from repro.serving.metrics import (TTFTMissBreakdown, evaluate,
+                                   merge_reports)
+
+
+def req(i, cls="standard", ttft=None, arrival=0.0, tokens=1,
+        aborted=False, gap=0.01):
+    """A finished synthetic request; ``ttft=None`` models one that never
+    produced a token (still queued/preempted at shutdown)."""
+    r = Request(req_id=i, arrival_time=arrival, prompt_len=8,
+                output_len=max(tokens, 1), slo=SLO_CLASSES[cls],
+                slo_class=cls)
+    r.start_running(arrival + 0.001)
+    if ttft is not None:
+        t0 = arrival + ttft
+        for k in range(tokens):
+            r.record_token(t0 + k * gap)
+    if aborted:
+        r.finish_at(arrival + 1.0, reason="aborted")
+    elif ttft is not None:
+        r.finish_at(t0 + tokens * gap)
+    return r
+
+
+# ------------------------------------------------------------------- empty
+def test_evaluate_empty_request_set():
+    rep = evaluate([], total_time=10.0)
+    assert rep.n == 0
+    assert rep.ttft_attainment == 0.0 and rep.tbt_attainment == 0.0
+    assert rep.p50_ttft == 0.0 and rep.p99_tbt == 0.0
+    assert rep.throughput_tok_s == 0.0
+    assert rep.n_aborted == 0 and rep.n_no_token == 0
+    assert rep.per_class == {}
+    assert rep.ttft_miss == TTFTMissBreakdown()
+    assert rep.row()["ttft_miss"]["n_missed"] == 0
+
+
+def test_evaluate_zero_total_time_no_division():
+    rep = evaluate([req(0, ttft=0.1, tokens=4)], total_time=0.0)
+    assert rep.throughput_tok_s == 0.0
+
+
+def test_merge_reports_empty_groups():
+    rep = merge_reports([[], []], total_time=5.0)
+    assert rep.n == 0 and rep.per_class == {}
+
+
+# ----------------------------------------------------------------- aborted
+def test_all_aborted_class_excluded_from_attainment():
+    """A class whose every request was cancelled: not an SLO violation —
+    zero denominator, not zero attainment over a phantom population."""
+    aborted = [req(i, cls="interactive", ttft=0.2, tokens=3, aborted=True)
+               for i in range(3)]
+    ok = [req(10 + i, cls="standard", ttft=0.1) for i in range(2)]
+    rep = evaluate(aborted + ok, total_time=10.0)
+    assert rep.n == 5 and rep.n_aborted == 3
+    cls = rep.per_class["interactive"]
+    assert cls.n == 3 and cls.n_aborted == 3 and cls.n_no_token == 0
+    assert cls.ttft_attainment == 0.0 and cls.tbt_attainment == 0.0
+    assert cls.ttft_miss.n_missed == 0      # aborts never count as misses
+    # the cluster-level denominator is the 2 live requests only
+    assert rep.ttft_attainment == 1.0
+    # aborted requests' tokens still consumed capacity -> throughput
+    assert rep.throughput_tok_s == pytest.approx((3 * 3 + 2 * 1) / 10.0)
+
+
+def test_aborted_excluded_from_miss_breakdown():
+    slow = req(0, cls="interactive", ttft=2.0)           # genuine miss
+    slow_aborted = req(1, cls="interactive", ttft=2.0, aborted=True)
+    rep = evaluate([slow, slow_aborted], total_time=5.0)
+    assert rep.ttft_miss.n_missed == 1
+    assert rep.ttft_miss.ttft_s == pytest.approx(2.0)
+
+
+# ------------------------------------------------- single-replica classes
+def test_merge_class_present_on_one_replica_only():
+    """Router shards by class: 'interactive' lands only on replica 0. The
+    merged per_class entry must equal that replica's own numbers, and
+    classes never mix."""
+    rep0 = [req(0, cls="interactive", ttft=0.5),
+            req(1, cls="interactive", ttft=1.5),         # miss (thr 1.0)
+            req(2, cls="standard", ttft=0.2)]
+    rep1 = [req(3, cls="standard", ttft=0.3),
+            req(4, cls="standard", ttft=6.0)]            # miss (thr 5.0)
+    m = merge_reports([rep0, rep1], total_time=10.0)
+    assert set(m.per_class) == {"interactive", "standard"}
+    inter = m.per_class["interactive"]
+    assert inter.n == 2
+    assert inter.ttft_attainment == 0.5
+    assert inter.ttft_miss.n_missed == 1
+    assert inter.ttft_miss.ttft_s == pytest.approx(1.5)
+    std = m.per_class["standard"]
+    assert std.n == 3 and std.ttft_attainment == pytest.approx(2 / 3)
+    # merge == evaluate on the union (counts, attainment, percentiles)
+    assert m == evaluate(rep0 + rep1, total_time=10.0)
+    # request-weighted combination of the per-replica reports
+    a, b = (evaluate(g, total_time=10.0) for g in (rep0, rep1))
+    assert m.ttft_attainment * 5 == pytest.approx(
+        a.ttft_attainment * 3 + b.ttft_attainment * 2)
+
+
+# ----------------------------------------------------- n_no_token semantics
+def test_no_token_requests_count_as_misses_in_denominator():
+    done = [req(i, ttft=0.1) for i in range(2)]
+    stuck = [req(10 + i, ttft=None) for i in range(2)]   # never ran to token
+    rep = evaluate(done + stuck, total_time=10.0)
+    assert rep.n == 4 and rep.n_no_token == 2 and rep.n_aborted == 0
+    # 2 of 4 live requests attained; the token-less pair are misses
+    assert rep.ttft_attainment == 0.5 and rep.tbt_attainment == 0.5
+    # but they cannot be ATTRIBUTED (no TTFT exists) -> not in breakdown
+    assert rep.ttft_miss.n_missed == 0
+    cls = rep.per_class["standard"]
+    assert cls.n_no_token == 2 and cls.ttft_attainment == 0.5
+    # percentiles come from requests WITH a first token only
+    assert rep.p50_ttft == pytest.approx(0.1)
+
+
+def test_aborted_not_double_counted_as_no_token():
+    """n_no_token counts LIVE token-less requests; an aborted request that
+    never produced a token lands in n_aborted only."""
+    r = req(0, ttft=None, aborted=True)
+    rep = evaluate([r, req(1, ttft=0.1)], total_time=1.0)
+    assert rep.n_aborted == 1 and rep.n_no_token == 0
+    assert rep.ttft_attainment == 1.0
+
+
+def test_per_class_no_token_denominator_isolated_per_class():
+    rows = [req(0, cls="interactive", ttft=0.2),
+            req(1, cls="interactive", ttft=None),
+            req(2, cls="batch", ttft=0.5),
+            req(3, cls="batch", ttft=0.6)]
+    rep = evaluate(rows, total_time=10.0)
+    assert rep.per_class["interactive"].n_no_token == 1
+    assert rep.per_class["interactive"].ttft_attainment == 0.5
+    assert rep.per_class["batch"].n_no_token == 0
+    assert rep.per_class["batch"].ttft_attainment == 1.0
+    assert rep.n_no_token == 1
+    assert rep.ttft_attainment == pytest.approx(3 / 4)
